@@ -1,0 +1,174 @@
+"""Table 2 / Fig. 6 / Fig. 7 / Fig. 8: ensemble composition benchmarks.
+
+Reproduces the paper's comparisons on the synthetic cohort:
+  * table2: RD / AF / LF / NPO / HOLMES under a fixed latency budget,
+    mean +/- std over seeds, all four metrics.
+  * fig6: search trajectory (accuracy & latency per iteration).
+  * fig7: final ROC-AUC across latency budgets, HOLMES vs NPO.
+  * fig8: surrogate R2 vs profiler interactions.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.baselines import (accuracy_first, latency_first, npo,
+                                  random_baseline)
+from repro.core.bagging import all_metrics, bagging_predict
+from repro.core.composer import ComposerParams, compose
+from repro.core.profiles import SystemConfig
+
+from benchmarks.zoo_setup import (binding_budget, build_zoo,
+                                  make_profilers, single_model_stats)
+
+
+def _ensemble_metrics(zoo, extras, b) -> Dict[str, float]:
+    side = [extras["vitals_scores"], extras["labs_scores"]]
+    sel = list(zoo.val_scores[np.asarray(b, bool)]) + side
+    return all_metrics(zoo.val_labels, np.mean(sel, axis=0))
+
+
+def run_all_methods(zoo, extras, budget: float, seed: int,
+                    sysconf: SystemConfig, n_iters: int = 10, K: int = 6):
+    f_a, f_l = make_profilers(zoo, sysconf, extras)
+    acc1, lat1 = single_model_stats(zoo, f_a, f_l)
+    n = len(zoo)
+    rd = random_baseline(n, f_a, f_l, budget, seed=seed)
+    af = accuracy_first(n, f_a, f_l, budget, acc1)
+    lf = latency_first(n, f_a, f_l, budget, lat1)
+    warm = [r.b_star for r in (rd, af, lf)]
+    calls = n_iters * K + 12
+    nr = npo(n, f_a, f_l, budget,
+             max_subset=max(1, int(lf.b_star.sum())),
+             n_calls=calls, seed=seed, warm_start=warm)
+    hb = compose(n, f_a, f_l, budget,
+                 ComposerParams(N=n_iters, K=K, N0=12, seed=seed),
+                 warm_start=warm)
+    return {"RD": rd, "AF": af, "LF": lf, "NPO": nr, "HOLMES": hb}
+
+
+def bench_table2(budget: float = None, seeds=(0, 1, 2), verbose=True,
+                 zoo=None, extras=None) -> Dict:
+    if zoo is None:
+        zoo, extras = build_zoo(verbose=verbose)
+    sysconf = SystemConfig(n_devices=2, n_patients=64)
+    if budget is None:
+        _, f_l = make_profilers(zoo, sysconf, extras)
+        budget = binding_budget(zoo, f_l)
+    t0 = time.time()
+    per_method: Dict[str, List[Dict[str, float]]] = {}
+    for seed in seeds:
+        res = run_all_methods(zoo, extras, budget, seed, sysconf)
+        for name, r in res.items():
+            m = _ensemble_metrics(zoo, extras, r.b_star)
+            m["latency"] = r.latency
+            m["feasible"] = float(r.feasible)
+            per_method.setdefault(name, []).append(m)
+    table = {}
+    for name, rows in per_method.items():
+        table[name] = {k: (float(np.mean([r[k] for r in rows])),
+                           float(np.std([r[k] for r in rows])))
+                       for k in rows[0]}
+    if verbose:
+        print(f"\nTable 2 (budget {budget * 1000:.0f} ms, "
+              f"{len(seeds)} seeds, {time.time() - t0:.0f}s):")
+        print(f"{'method':8s} {'ROC-AUC':>16s} {'PR-AUC':>16s} "
+              f"{'F1':>16s} {'Accuracy':>16s} {'latency':>10s}")
+        for name in ("RD", "AF", "LF", "NPO", "HOLMES"):
+            r = table[name]
+            print(f"{name:8s} "
+                  f"{r['roc_auc'][0]:.4f}±{r['roc_auc'][1]:.4f} "
+                  f"{r['pr_auc'][0]:.4f}±{r['pr_auc'][1]:.4f} "
+                  f"{r['f1'][0]:.4f}±{r['f1'][1]:.4f} "
+                  f"{r['accuracy'][0]:.4f}±{r['accuracy'][1]:.4f} "
+                  f"{r['latency'][0] * 1000:9.1f}ms")
+    return table
+
+
+def bench_fig6(budget: float = None, seed: int = 0, verbose=True,
+               zoo=None, extras=None) -> Dict:
+    if zoo is None:
+        zoo, extras = build_zoo(verbose=verbose)
+    sysconf = SystemConfig(n_devices=2, n_patients=64)
+    if budget is None:
+        _, f_l = make_profilers(zoo, sysconf, extras)
+        budget = binding_budget(zoo, f_l)
+    res = run_all_methods(zoo, extras, budget, seed, sysconf, n_iters=12)
+    out = {}
+    for name, r in res.items():
+        out[name] = [{"calls": h["profiler_calls"],
+                      "acc": h["new_acc"], "lat": h["new_lat"],
+                      "best_acc": h.get("best_acc")}
+                     for h in r.history]
+    if verbose:
+        print("\nFig 6 trajectory (best feasible AUC by profiler calls):")
+        for name in ("NPO", "HOLMES"):
+            tr = out[name]
+            line = " ".join(f"{h['best_acc']:.3f}" if h["best_acc"] ==
+                            h["best_acc"] else "  -  "
+                            for h in tr[:: max(1, len(tr) // 8)])
+            print(f"  {name:7s} {line}")
+    return out
+
+
+def bench_fig7(budgets=None, seeds=(0, 1, 2),
+               verbose=True, zoo=None, extras=None) -> Dict:
+    if zoo is None:
+        zoo, extras = build_zoo(verbose=verbose)
+    sysconf = SystemConfig(n_devices=2, n_patients=64)
+    if budgets is None:
+        _, f_l = make_profilers(zoo, sysconf, extras)
+        full = binding_budget(zoo, f_l, frac=1.0)
+        budgets = tuple(round(full * f, 4) for f in
+                        (0.15, 0.3, 0.5, 0.8))
+    out = {}
+    for budget in budgets:
+        h_acc, n_acc = [], []
+        for seed in seeds:
+            res = run_all_methods(zoo, extras, budget, seed, sysconf,
+                                  n_iters=8)
+            h_acc.append(res["HOLMES"].accuracy)
+            n_acc.append(res["NPO"].accuracy)
+        out[budget] = {
+            "HOLMES": (float(np.mean(h_acc)), float(np.std(h_acc))),
+            "NPO": (float(np.mean(n_acc)), float(np.std(n_acc)))}
+        if verbose:
+            h, n = out[budget]["HOLMES"], out[budget]["NPO"]
+            print(f"Fig 7 budget {budget * 1000:5.0f}ms: "
+                  f"HOLMES {h[0]:.4f}±{h[1]:.4f}  "
+                  f"NPO {n[0]:.4f}±{n[1]:.4f}")
+    return out
+
+
+def bench_fig8(budget: float = None, seed: int = 0, verbose=True,
+               zoo=None, extras=None) -> List[Dict]:
+    if zoo is None:
+        zoo, extras = build_zoo(verbose=verbose)
+    sysconf = SystemConfig(n_devices=2, n_patients=64)
+    f_a, f_l = make_profilers(zoo, sysconf, extras)
+    if budget is None:
+        budget = binding_budget(zoo, f_l)
+    rng = np.random.default_rng(seed + 100)
+    n = len(zoo)
+    held = []
+    for _ in range(60):
+        size = int(rng.integers(1, max(2, n // 2)))
+        b = np.zeros(n, np.int8)
+        b[rng.choice(n, size=size, replace=False)] = 1
+        held.append(b)
+    held = np.stack(held)
+    ha = np.asarray([f_a(b) for b in held])
+    hl = np.asarray([f_l(b) for b in held])
+    res = compose(n, f_a, f_l, budget,
+                  ComposerParams(N=12, K=6, N0=12, seed=seed),
+                  heldout_B=held, heldout_acc=ha, heldout_lat=hl)
+    traj = [{"calls": h["profiler_calls"], "r2_acc": h["r2_acc"],
+             "r2_lat": h["r2_lat"]} for h in res.history]
+    if verbose:
+        print("\nFig 8 surrogate R2 (calls: acc / lat):")
+        for h in traj:
+            print(f"  {h['calls']:4d}: {h['r2_acc']:+.3f} / "
+                  f"{h['r2_lat']:+.3f}")
+    return traj

@@ -1,0 +1,61 @@
+"""§Roofline table: renders the dry-run/probe JSON artifacts into the
+per-(arch x shape) roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records(pattern: str = "roofline_*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            data = json.load(f)
+        recs.extend(data.get("results", []))
+    # last write wins per (arch, shape, mesh, variant)
+    dedup = {}
+    for r in recs:
+        key = (r["arch"], r["shape"], r.get("mesh"), r.get("variant", ""))
+        dedup[key] = r
+    return list(dedup.values())
+
+
+def render(recs: List[Dict], only_baseline: bool = True) -> str:
+    rows = [r for r in recs if not r.get("variant")] if only_baseline \
+        else recs
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'compute(s)':>10s} | "
+           f"{'memory(s)':>10s} | {'collective(s)':>13s} | {'dominant':>10s} "
+           f"| {'useful':>6s} | {'MFU-bound':>9s} |")
+    sep = "|" + "-" * 26 + "|" + "-" * 13 + "|" + "-" * 12 + "|" \
+        + "-" * 12 + "|" + "-" * 15 + "|" + "-" * 12 + "|" + "-" * 8 \
+        + "|" + "-" * 11 + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:24s} | {r['shape']:11s} "
+            f"| {r['compute_s']:10.3e} | {r['memory_s']:10.3e} "
+            f"| {r['collective_s']:13.3e} | {r['dominant']:>10s} "
+            f"| {r['useful_ratio']:6.2f} | {r['mfu_bound']:9.2%} |")
+    return "\n".join(lines)
+
+
+def bench_roofline(verbose: bool = True) -> List[Dict]:
+    recs = load_records()
+    if verbose:
+        if recs:
+            print("\n§Roofline baseline table (single-pod 16x16, "
+                  "per-device terms):")
+            print(render(recs))
+        else:
+            print("\n[roofline_table] no results/roofline_*.json yet — "
+                  "run PYTHONPATH=src python -m repro.launch.roofline")
+    return recs
+
+
+if __name__ == "__main__":
+    bench_roofline()

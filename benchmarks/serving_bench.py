@@ -1,0 +1,117 @@
+"""Fig. 9 / Fig. 10 / Fig. 13: serving-system benchmarks on the DES
+(deterministic stand-in for the paper's HTTP/RPC testbed) plus real
+wall-clock jitted-inference costs measured on this machine.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.serving.latency import LatencyProfiler, queueing_bound
+from repro.serving.simulator import SimConfig, simulate
+
+
+def bench_fig9(model_cost: float = 0.02, batch_period: float = 3600.0,
+               verbose=True) -> Dict:
+    """Online (every 30 s) vs offline hourly batch, single patient."""
+    dur = 2 * batch_period
+    online = simulate([model_cost],
+                      SimConfig(n_patients=1, n_devices=2,
+                                duration_seconds=dur, window_seconds=30))
+    offline = simulate([model_cost],
+                       SimConfig(n_patients=1, n_devices=2,
+                                 duration_seconds=dur, window_seconds=30,
+                                 batch_period=batch_period))
+    # inference-only latency (excludes staleness): queue wait + service
+    inf_online = online.p(95)
+    inf_offline = float(np.percentile(
+        [q.t_done - q.t_start for q in offline.queries], 95)) \
+        + 0.0  # service-side only
+    staleness = float(np.mean(
+        [q.t_start - q.t_window for q in offline.queries]))
+    out = {"online_p95_s": inf_online,
+           "offline_batch_p95_s": offline.p(95),
+           "offline_inference_only_p95_s": inf_offline,
+           "offline_mean_staleness_s": staleness,
+           "staleness_ratio": offline.p(95) / max(inf_online, 1e-9)}
+    if verbose:
+        print(f"\nFig 9: online p95 {inf_online * 1000:.1f}ms vs "
+              f"offline-batch p95 {offline.p(95):.0f}s "
+              f"(mean staleness {staleness:.0f}s, "
+              f"{out['staleness_ratio']:.0f}x)")
+    return out
+
+
+def bench_fig10(costs: List[float] = (0.01, 0.02, 0.015),
+                patients=(8, 16, 32, 64, 100, 128),
+                devices=(1, 2, 4, 8), verbose=True) -> Dict:
+    left = {}
+    for n in patients:
+        r = simulate(list(costs), SimConfig(
+            n_patients=n, n_devices=2, duration_seconds=120,
+            window_seconds=30, seed=2))
+        left[n] = {"p95_s": r.p(95), "p50_s": r.p(50),
+                   "utilization": r.utilization,
+                   "ingest_qps": n * 250}
+    right = {}
+    for d in devices:
+        r = simulate(list(costs), SimConfig(
+            n_patients=64, n_devices=d, duration_seconds=120,
+            window_seconds=30, seed=2))
+        right[d] = {"p95_s": r.p(95), "utilization": r.utilization}
+    if verbose:
+        print("\nFig 10 (left): latency vs #patients @2 devices")
+        for n, v in left.items():
+            print(f"  {n:4d} patients ({v['ingest_qps']:6d} qps ingest): "
+                  f"p95 {v['p95_s'] * 1000:7.1f}ms "
+                  f"util {v['utilization']:.2f}")
+        print("Fig 10 (right): latency vs #devices @64 patients")
+        for d, v in right.items():
+            print(f"  {d} devices: p95 {v['p95_s'] * 1000:7.1f}ms")
+    return {"vs_patients": left, "vs_devices": right}
+
+
+def bench_fig13(windows=(5, 10, 30, 60), model_cost_per_s: float = 7e-4,
+                verbose=True) -> Dict:
+    """Larger observation window => more samples per query => larger
+    T_s, and fewer-but-burstier queries => T_q effect (A.4)."""
+    out = {}
+    for w in windows:
+        cost = model_cost_per_s * w          # inference cost grows w/ clip
+        cfg = SimConfig(n_patients=64, n_devices=2,
+                        duration_seconds=40 * w, window_seconds=float(w),
+                        seed=3)
+        r = simulate([cost], cfg)
+        mu = cfg.n_devices / cost
+        tq = queueing_bound(r.arrivals, mu, cost)
+        out[w] = {"ts_s": cost, "tq_bound_s": tq,
+                  "e2e_p95_s": r.p(95),
+                  "tq_emp_max_s": float(r.queue_delays().max())}
+        if verbose:
+            v = out[w]
+            print(f"Fig 13 window {w:3d}s: Ts {v['ts_s'] * 1000:6.1f}ms  "
+                  f"Tq_bound {v['tq_bound_s'] * 1000:6.1f}ms  "
+                  f"e2e_p95 {v['e2e_p95_s'] * 1000:6.1f}ms")
+    return out
+
+
+def bench_measured_costs(verbose=True) -> Dict:
+    """Real wall-clock per-member inference cost (timeit analogue of
+    A.4's 'Time in PyTorch' curve) for a few zoo members."""
+    import jax
+    from repro.configs.ecg_zoo import zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.pipeline import EnsembleService, ZooMember
+    specs = zoo_specs(reduced=True, input_len=750)[:4]
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    svc = EnsembleService(members)
+    costs = svc.measured_costs(reps=5)
+    out = {s.name: c for s, c in zip(specs, costs)}
+    if verbose:
+        print("\nmeasured per-member inference cost (CPU, jitted):")
+        for k, v in out.items():
+            print(f"  {k}: {v * 1000:.2f} ms/query")
+    return out

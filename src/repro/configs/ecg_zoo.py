@@ -1,0 +1,56 @@
+"""The paper's own model zoo (§4.1.1): 1-D-stripe ResNeXt ECG classifiers.
+
+Full zoo: 3 ECG leads × widths {8,16,32,64,128} × blocks {2,4,8,16} = 60
+deep models.  Vitals get a random forest, labs a logistic regression; per
+the paper those CPU models are NOT zoo members for latency purposes but DO
+join the final accuracy ensemble.
+
+``zoo_specs(reduced=True)`` is the CPU-friendly zoo used by tests and the
+default benchmarks (3 leads × {8,16} filters × {2,4} blocks = 12 models,
+shorter clips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class EcgModelSpec:
+    name: str
+    lead: int                 # 0,1,2  <-> leads I, II, III
+    width: int                # filters in the first conv layer
+    blocks: int               # residual blocks
+    input_len: int            # samples per 30 s clip (250 Hz => 7500)
+    cardinality: int = 8      # ResNeXt group count
+    kernel_size: int = 7      # 1-D stripe kernel
+
+
+FULL_WIDTHS = (8, 16, 32, 64, 128)
+FULL_BLOCKS = (2, 4, 8, 16)
+REDUCED_WIDTHS = (8, 16)
+REDUCED_BLOCKS = (2, 4)
+
+
+def zoo_specs(reduced: bool = True, input_len: int = None,
+              widths=None, blocks=None) -> List[EcgModelSpec]:
+    widths = widths or (REDUCED_WIDTHS if reduced else FULL_WIDTHS)
+    blocks = blocks or (REDUCED_BLOCKS if reduced else FULL_BLOCKS)
+    if input_len is None:
+        input_len = 750 if reduced else 7500
+    out = []
+    for lead in range(3):
+        for w in widths:
+            for b in blocks:
+                out.append(EcgModelSpec(
+                    name=f"lead{lead + 1}_w{w}_b{b}",
+                    lead=lead, width=w, blocks=b, input_len=input_len,
+                    cardinality=min(8, w)))
+    return out
+
+
+N_VITALS = 7     # 1 Hz vitals (mean BP, SpO2, ...)
+N_LABS = 8       # irregular labs (pH, lactate, ...)
+ECG_HZ = 250
+VITALS_HZ = 1
+CLIP_SECONDS = 30

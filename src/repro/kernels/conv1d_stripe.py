@@ -1,0 +1,69 @@
+"""1-D "stripe" grouped convolution Pallas TPU kernel.
+
+The hot op of the paper's ECG ResNeXt zoo (and the Mamba short conv).
+TPU adaptation (DESIGN.md §2): instead of an im2col buffer, the conv is a
+K-tap sum of shifted [L, Cin_g] x [Cin_g, Cout_g] matmuls with the weight
+tap held VMEM-stationary — MXU-shaped without materializing patches.
+
+Grid: (batch, groups) — each step keeps the full (padded) length in VMEM,
+which fits for waveform workloads (7500 x 128 floats = 3.8 MB).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, y_ref, *, K: int, stride: int, L_out: int):
+    x = x_ref[0]                                  # [Lp, cin_g]
+    acc = jnp.zeros((L_out, y_ref.shape[-1]), jnp.float32)
+    for k in range(K):                            # K is small (4 or 7)
+        xk = jax.lax.dynamic_slice_in_dim(x, k, (L_out - 1) * stride + 1, 0)
+        xk = xk[::stride]                         # [L_out, cin_g]
+        acc += jax.lax.dot_general(
+            xk, w_ref[k], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "groups", "padding",
+                                             "interpret"))
+def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                  stride: int = 1, groups: int = 1, padding: str = "SAME",
+                  *, interpret: bool = False) -> jax.Array:
+    """x: [B, L, Cin]; w: [K, Cin//groups, Cout]; SAME or CAUSAL padding.
+    Matches ref.conv1d_stripe / lax.conv_general_dilated."""
+    B, L, Cin = x.shape
+    K, cin_g, Cout = w.shape
+    cout_g = Cout // groups
+    L_out = -(-L // stride)                       # ceil, as in SAME
+
+    if padding == "CAUSAL":
+        lo, hi = K - 1, 0
+    else:                                         # SAME (lax convention)
+        pad_total = max((L_out - 1) * stride + K - L, 0)
+        lo = pad_total // 2
+        hi = pad_total - lo
+    extra = (L_out - 1) * stride + K - (L + lo + hi)
+    xp = jnp.pad(x, ((0, 0), (lo, hi + max(extra, 0)), (0, 0)))
+    Lp = xp.shape[1]
+
+    grid = (B, groups)
+    y = pl.pallas_call(
+        functools.partial(_kernel, K=K, stride=stride, L_out=L_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lp, cin_g), lambda bi, g: (bi, 0, g)),
+            pl.BlockSpec((K, cin_g, cout_g), lambda bi, g: (0, 0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, L_out, cout_g), lambda bi, g: (bi, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((B, L_out, Cout), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,111 @@
+"""Single-token decode attention Pallas TPU kernel.
+
+One query token per sequence against a (possibly ring-buffered) KV cache.
+All query heads of one KV group are processed together so the MXU sees a
+[group, D] x [D, block_k] matmul instead of vector-matrix products.
+
+Grid: (batch, kv_heads, k_blocks); k_blocks innermost, accumulating the
+online softmax into VMEM scratch.  Cache validity comes from kpos (-1 =
+empty slot), so partially-filled and ring caches need no special cases.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kp = kpos_ref[...].astype(jnp.int32)             # [block_k]
+    qp = qpos_ref[0]
+
+    ok = (kp >= 0) & (kp <= qp)
+    if window:
+        ok &= qp - kp < window
+
+    @pl.when(jnp.any(ok))
+    def _compute():
+        q = q_ref[0, 0, :, :]                        # [g, D]
+        k = k_ref[0, :, 0, :]                        # [block_k, D]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [g, block_k]
+        s = jnp.where(ok[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kpos: jax.Array, qpos: jax.Array, *,
+                     window: int = 0, scale: Optional[float] = None,
+                     block_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B,Hq,D]; k,v: [B,T,Hkv,D]; kpos: [T]; qpos: scalar -> [B,Hq,D]."""
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+    block_k = min(block_k, max(T, 8))
+
+    pad = (-T) % block_k
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        kpos = jnp.pad(kpos.astype(jnp.int32), (0, pad), constant_values=-1)
+    Tp = k.shape[1]
+    qpos_arr = jnp.reshape(qpos, (1,)).astype(jnp.int32)
+    qg = q.reshape(B, Hkv, g, D)
+
+    grid = (B, Hkv, Tp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (0,)),
+            pl.BlockSpec((block_k,), lambda b, h, ki: (ki,)),
+            pl.BlockSpec((1, 1, g, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos_arr, kpos, qg, k, v)
+    return out.reshape(B, Hq, D)

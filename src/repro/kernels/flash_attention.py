@@ -1,0 +1,148 @@
+"""Flash attention (prefill/training) Pallas TPU kernel.
+
+MXU-tiled online-softmax attention with GQA head grouping, causal and
+sliding-window masking driven by explicit position vectors (so ring-buffer
+caches work unchanged).
+
+Grid: (batch, q_heads, q_blocks, k_blocks) — the k_block axis is innermost
+and sequential on TPU, accumulating into VMEM scratch (m, l, acc).  Blocks
+fully masked out by causality/window are skipped via @pl.when, which for
+causal prefill halves the compute versus a dense sweep.
+
+Block sizes default to 128 (MXU native); inputs are padded in the wrapper
+and positions carry validity (pos < 0 = empty), so any shape works.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+            window: int, block_q: int, block_k: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qp = qpos_ref[...].astype(jnp.int32)            # [block_q]
+    kp = kpos_ref[...].astype(jnp.int32)            # [block_k]
+
+    # --- structural skip: block entirely masked -------------------------
+    q_min = jnp.min(qp)
+    q_max = jnp.max(qp)
+    k_min = jnp.min(jnp.where(kp >= 0, kp, jnp.iinfo(jnp.int32).max))
+    any_valid = jnp.any(kp >= 0)
+    live = any_valid
+    if causal:
+        live &= k_min <= q_max
+    if window:
+        k_max = jnp.max(kp)
+        live &= k_max > q_min - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]                       # [block_q, d]
+        k = k_ref[0, :, 0, :]                       # [block_k, d]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        ok = kp[None, :] >= 0
+        if causal:
+            ok &= kp[None, :] <= qp[:, None]
+        if window:
+            ok &= qp[:, None] - kp[None, :] < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                         # [block_q]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(x, mult, axis, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    qpos: jax.Array, kpos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,S,Hq,D]; k,v: [B,T,Hkv,D]; qpos: [S]; kpos: [T] -> [B,S,Hq,D].
+
+    Requires k/v head dim == q head dim (use MLA's non-absorbed
+    materialization or the decode kernel otherwise).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+    block_q = min(block_q, max(S, 8))
+    block_k = min(block_k, max(T, 8))
+
+    qp = _pad_to(qpos.astype(jnp.int32), block_q, 0, value=-(2 ** 30))
+    kp = _pad_to(kpos.astype(jnp.int32), block_k, 0, value=-1)
+    q = _pad_to(q, block_q, 1)
+    k = _pad_to(k, block_k, 1)
+    v = _pad_to(v, block_k, 1)
+    Sp, Tp = q.shape[1], k.shape[1]
+
+    grid = (B, Hq, Sp // block_q, Tp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),
+            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki, _g=g: (b, ki, h // _g, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki, _g=g: (b, ki, h // _g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, q, k, v)
+    return out[:, :S]

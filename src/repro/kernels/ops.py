@@ -1,0 +1,83 @@
+"""Dispatching wrappers over the Pallas kernels and their jnp oracles.
+
+``impl`` selects the execution path:
+  * "xla"              — pure-jnp oracle (ref.py).  Default; used by the
+                         512-device dry-run (Pallas cannot lower to the
+                         host-platform placeholder devices) and CPU tests.
+  * "pallas"           — the TPU kernel, compiled.
+  * "pallas_interpret" — the TPU kernel body executed in Python on CPU;
+                         used by the kernel-vs-oracle tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_IMPLS = ("xla", "pallas", "pallas_interpret")
+
+
+def _check(impl: str) -> None:
+    if impl not in _IMPLS:
+        raise ValueError(f"impl={impl!r} not in {_IMPLS}")
+
+
+def attention(q, k, v, qpos, kpos, *, causal: bool = True, window: int = 0,
+              scale: Optional[float] = None, impl: str = "xla",
+              chunk: int = 0, unroll: bool = False):
+    _check(impl)
+    if impl == "xla":
+        if chunk:
+            return ref.attention_chunked(q, k, v, qpos, kpos,
+                                         causal=causal, window=window,
+                                         scale=scale, chunk=chunk,
+                                         unroll=unroll)
+        return ref.attention(q, k, v, qpos, kpos, causal=causal,
+                             window=window, scale=scale)
+    from repro.kernels import flash_attention
+    return flash_attention.flash_attention(
+        q, k, v, qpos, kpos, causal=causal, window=window, scale=scale,
+        interpret=(impl == "pallas_interpret"))
+
+
+def decode_attention(q, k, v, kpos, qpos, *, window: int = 0,
+                     impl: str = "xla"):
+    _check(impl)
+    if impl == "xla":
+        return ref.decode_attention(q, k, v, kpos, qpos, window=window)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k, v, kpos, qpos, window=window,
+                               interpret=(impl == "pallas_interpret"))
+
+
+def ssd(x, dt, A, B_, C, D, chunk: int, h0=None, *, impl: str = "xla"):
+    _check(impl)
+    if impl == "xla":
+        return ref.ssd_chunked(x, dt, A, B_, C, D, chunk, h0)
+    from repro.kernels import ssd_scan
+    return ssd_scan.ssd(x, dt, A, B_, C, D, chunk, h0,
+                        interpret=(impl == "pallas_interpret"))
+
+
+def moe_gmm(xbuf, w_gate, w_up, w_down, *, impl: str = "xla"):
+    _check(impl)
+    if impl == "xla":
+        return ref.moe_gmm(xbuf, w_gate, w_up, w_down)
+    from repro.kernels import moe_gmm as gmm
+    return gmm.moe_gmm(xbuf, w_gate, w_up, w_down,
+                       interpret=(impl == "pallas_interpret"))
+
+
+def conv1d(x, w, b=None, stride: int = 1, groups: int = 1,
+           padding: str = "SAME", *, impl: str = "xla"):
+    _check(impl)
+    if impl == "xla":
+        return ref.conv1d_stripe(x, w, b, stride, groups, padding)
+    from repro.kernels import conv1d_stripe
+    return conv1d_stripe.conv1d_stripe(
+        x, w, b, stride, groups, padding,
+        interpret=(impl == "pallas_interpret"))

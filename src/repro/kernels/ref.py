@@ -1,0 +1,242 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the reference implementations used (a) as the XLA execution path
+for dry-runs/training on CPU and (b) as the ground truth the Pallas kernels
+are validated against (interpret=True) in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(qpos: jax.Array, kpos: jax.Array, causal: bool,
+               window: int) -> jax.Array:
+    qp = qpos[:, None].astype(jnp.int32)
+    kp = kpos[None, :].astype(jnp.int32)
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= (qp - kp) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              qpos: jax.Array, kpos: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              scale: Optional[float] = None) -> jax.Array:
+    """Grouped-query attention oracle.
+
+    q: [B, S, Hq, D]; k, v: [B, T, Hkv, D]; Hkv must divide Hq.
+    qpos: [S], kpos: [T] absolute positions (-1 marks empty cache slots).
+    Returns [B, S, Hq, D].
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[3]                      # may differ from D (MLA)
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, Hkv, g, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits * scale + _mask_bias(qpos, kpos, causal, window)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, Dv)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kpos: jax.Array, qpos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """Single-token decode oracle.  q: [B, Hq, D]; k,v: [B, T, Hkv, D];
+    kpos: [T]; qpos: scalar position of the query token."""
+    out = attention(q[:, None], k, v, jnp.asarray([qpos])
+                    if jnp.ndim(qpos) == 0 else qpos[None], kpos,
+                    causal=True, window=window)
+    return out[:, 0]
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      qpos: jax.Array, kpos: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      chunk: int = 512, unroll: bool = False) -> jax.Array:
+    """Online-softmax attention over KV chunks in pure XLA — the flash-
+    attention schedule without Pallas (so it lowers on the 512-device host
+    platform).  Never materializes the [S, T] score matrix; HBM traffic
+    drops from O(S*T) to O(S*T/chunk-resident) per layer.  §Perf lever B.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos.astype(jnp.int32), (0, pad),
+                       constant_values=-1)
+    nc = k.shape[1] // chunk
+    qg = q.reshape(B, S, Hkv, g, D)
+    kc = k.reshape(B, nc, chunk, Hkv, D)
+    vc = v.reshape(B, nc, chunk, Hkv, Dv)
+    kpc = kpos.reshape(nc, chunk)
+    qp = qpos.astype(jnp.int32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb
+                       ).astype(jnp.float32) * scale
+        ok = kp[None, :] >= 0
+        if causal:
+            ok &= kp[None, :] <= qp[:, None]
+        if window:
+            ok &= qp[:, None] - kp[None, :] < window
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = (acc * alpha[..., None]
+               + jnp.einsum("bkgst,btkd->bkgsd", p.astype(vb.dtype), vb))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, g, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpc),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, Hq, Dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ SSD
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+                C: jax.Array, D: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Mamba-2 SSD (state-space duality) chunked scan oracle.
+
+    x:  [B, S, H, P]   inputs per head
+    dt: [B, S, H]      softplus-ed timestep (>0)
+    A:  [H]            negative decay rate per head (A < 0)
+    B_: [B, S, G, N]   input gates (G groups broadcast over H)
+    C:  [B, S, G, N]   output gates
+    D:  [H]            skip
+    h0: [B, H, P, N]   initial state (optional)
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    S0 = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> no-op steps
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2)      # [B,S,H,N]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = Bh.reshape(b, nc, chunk, H, N)
+    Cc = Ch.reshape(b, nc, chunk, H, N)
+
+    dA = dtc * A[None, None, None, :]                   # [b,nc,c,H] (<=0)
+    seg = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    total = seg[:, :, -1, :]                            # [b,nc,H]
+
+    # within-chunk (quadratic) term: L[i,j] = exp(seg_i - seg_j) for i>=j
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # [b,nc,c,c,H]
+    ii, jj = jnp.tril_indices(chunk)
+    mask = jnp.zeros((chunk, chunk), bool).at[ii, jj].set(True)
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bqchs,bqkhs->bqckh", Cc, Bc)             # [b,nc,c,c,H]
+    y_diag = jnp.einsum("bqckh,bqckh,bqkh,bqkhp->bqchp",
+                        CB, L.astype(CB.dtype),
+                        dtc.astype(CB.dtype), xc)
+
+    # chunk input states: contribution of each chunk to its end-state
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)        # [b,nc,c,H]
+    states = jnp.einsum("bqchs,bqch,bqch,bqchp->bqhps",
+                        Bc, decay_to_end.astype(Bc.dtype),
+                        dtc.astype(Bc.dtype), xc
+                        ).astype(jnp.float32)                 # [b,nc,H,P,N]
+
+    # inter-chunk recurrence over nc chunk states (f32 carry)
+    def step(h, inp):
+        st, tot = inp                                          # [b,H,P,N], [b,H]
+        h_new = h * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(step,
+                              h0.astype(jnp.float32),
+                              (jnp.moveaxis(states, 1, 0),
+                               jnp.moveaxis(total, 1, 0).astype(
+                                   jnp.float32)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                        # [b,nc,H,P,N]
+
+    # output from carried state
+    decay_from_start = jnp.exp(seg)                            # [b,nc,c,H]
+    y_off = jnp.einsum("bqchs,bqch,bqhps->bqchp",
+                       Cc.astype(jnp.float32),
+                       decay_from_start.astype(jnp.float32), h_prev)
+    y = ((y_diag.astype(jnp.float32) + y_off).astype(x.dtype)
+         ).reshape(b, S, H, P) + x * D[None, None, :, None].astype(x.dtype)
+    return y[:, :S0], hT
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B_: jax.Array, C: jax.Array, D: jax.Array):
+    """One recurrent SSD step.  h: [B,H,P,N]; x: [B,H,P]; dt: [B,H];
+    B_, C: [B,G,N].  Returns (y [B,H,P], h_new)."""
+    H, G = x.shape[1], B_.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])[:, :, None, None]
+    h_new = h * dA + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, x)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new) + x * D[None, :, None]
+    return y, h_new
+
+
+# ------------------------------------------------------------- MoE GMM
+def moe_gmm(xbuf: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array) -> jax.Array:
+    """Grouped expert SwiGLU oracle.  xbuf: [E, C, d] (capacity-dispatched
+    tokens); weights: [E, d, f], [E, d, f], [E, f, d].  Returns [E, C, d]."""
+    gate = jnp.einsum("ecd,edf->ecf", xbuf, w_gate)
+    up = jnp.einsum("ecd,edf->ecf", xbuf, w_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, w_down)
+
+
+# -------------------------------------------------------- conv1d stripe
+def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                  stride: int = 1, groups: int = 1,
+                  padding: str = "SAME") -> jax.Array:
+    """Grouped 1-D convolution oracle (the ResNeXt "stripe" conv and the
+    Mamba short conv both lower to this).
+
+    x: [B, L, Cin]; w: [K, Cin//groups, Cout]; padding 'SAME' or 'CAUSAL'.
+    Returns [B, L_out, Cout]."""
+    K = w.shape[0]
+    pad = [(K - 1, 0)] if padding == "CAUSAL" else padding
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=pad,
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=groups)
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, with zero allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k [--multi-pod] [--out results.json]
+
+Proves the distribution config is coherent: sharding mismatches, compile
+OOMs and unsupported collectives all surface here.  Emits
+memory_analysis / cost_analysis / collective-bytes for §Roofline.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_model
+from repro.training.optimizer import AdamWState
+from repro.training.train_loop import (make_serve_prefill, make_serve_step,
+                                       make_train_step)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the (partitioned)
+    HLO.  Keyed by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name with word boundaries: "all-reduce(",
+            # "all-reduce-start(" etc., but not fusion names
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                shape_part = rhs.split(kind)[0]
+                out[kind] += _shape_bytes(shape_part)
+                break
+    return out
+
+
+def build_step(cfg, shape, rt):
+    if shape.kind == "train":
+        return make_train_step(cfg, rt, sp.default_optimizer())
+    if shape.kind == "prefill":
+        return make_serve_prefill(cfg, rt)
+    return make_serve_step(cfg, rt)
+
+
+def build_shardings(cfg, shape, rt, mesh, abstract_args,
+                    dp_only: bool = False):
+    """dp_only (§Perf): pure data parallelism — params replicated, batch
+    sharded over EVERY mesh axis (the right layout for small models whose
+    head/ff dims do not usefully shard 16 ways)."""
+    model_size = 1 if dp_only else None
+    if shape.kind == "train":
+        params, opt_state, batch = abstract_args
+        p_sh = shd.partition_params(params, cfg, mesh, model_size)
+        o_sh = AdamWState(step=shd.replicated(mesh),
+                          mu=p_sh, nu=p_sh)
+        return (p_sh, o_sh, shd.partition_batch(batch, mesh, dp_only))
+    if shape.kind == "prefill":
+        params, batch = abstract_args
+        return (shd.partition_params(params, cfg, mesh, model_size),
+                shd.partition_batch(batch, mesh, dp_only))
+    params, cache, token = abstract_args
+    return (shd.partition_params(params, cfg, mesh, model_size),
+            shd.partition_cache(cache, mesh, shape.global_batch, dp_only),
+            shd.batch_input_sharding(mesh, shape.global_batch, 1,
+                                     dp_only))
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, absorbed_mla: bool = False,
+               unroll: bool = False, dp_only: bool = False,
+               rt_overrides: Optional[Dict] = None) -> Dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = sp.runtime_for(cfg, shape, mesh.shape["model"],
+                        absorbed_mla=absorbed_mla)
+    if unroll:
+        rt = _dc.replace(rt, scan_unroll=True)
+    if rt_overrides:
+        rt = _dc.replace(rt, **rt_overrides)
+    if rt.moe_impl == "shard_map":
+        rt = _dc.replace(rt, mesh=mesh)
+    t0 = time.time()
+    abstract_args = sp.input_specs(cfg, shape, rt)
+    step = build_step(cfg, shape, rt)
+    in_sh = build_shardings(cfg, shape, rt, mesh, abstract_args, dp_only)
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*abstract_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0))
+        if cost else 0.0,
+        "collective_bytes": coll,
+        "collective_total": float(sum(coll.values())),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "kv_mult": rt.kv_mult, "window": rt.window,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK  "
+              f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+              f"coll={rec['collective_total']:.3e} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: args={rec['argument_bytes']:.3e} "
+              f"out={rec['output_bytes']:.3e} temp={rec['temp_bytes']:.3e} "
+              f"peak={rec['peak_bytes']:.3e}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {sorted(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--absorbed-mla", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(dryrun_one(
+                        arch, shape, mp, absorbed_mla=args.absorbed_mla))
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((arch, shape, mp, repr(e)[:500]))
+                    print(f"[dryrun] {arch} x {shape} x "
+                          f"{'2x16x16' if mp else '16x16'}: FAIL {e!r}",
+                          file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results,
+                       "failures": [list(f_) for f_ in failures]}, f,
+                      indent=1)
+    print(f"[dryrun] {len(results)} OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

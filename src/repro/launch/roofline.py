@@ -1,0 +1,172 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis from the compiled dry-run (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape) on the single-pod mesh, all PER-DEVICE:
+    compute    = HLO_FLOPs / 197e12           (TPU v5e bf16 peak)
+    memory     = HLO_bytes / 819e9            (HBM bandwidth)
+    collective = collective_bytes / 50e9      (ICI per link)
+
+Methodology note: XLA cost_analysis counts a while-loop body ONCE
+regardless of trip count, so layer-scanned models under-report.  We
+therefore lower two reduced-layer clones with scan_unroll=True and
+extrapolate linearly in the repeating-unit count:
+    m(full) = m(A) + (units_full - units_A) * (m(B) - m(A)) / (uB - uA)
+which is exact for the per-layer terms and keeps embed/logits in the
+intercept.  (Calibrated: a [1024,512]x[512,2048] sharded matmul reports
+exactly flops/n_devices; scan bodies report once.)
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+
+
+def probe_pair(cfg: ArchConfig) -> Tuple[ArchConfig, float, ArchConfig,
+                                         float, float]:
+    """(cfg_A, units_A, cfg_B, units_B, units_full)."""
+    r = dataclasses.replace
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        return (r(cfg, num_layers=k), 1.0, r(cfg, num_layers=2 * k), 2.0,
+                cfg.num_layers / k)
+    if cfg.family == "encdec":
+        return (r(cfg, enc_layers=2, dec_layers=2, num_layers=4), 2.0,
+                r(cfg, enc_layers=4, dec_layers=4, num_layers=8), 4.0,
+                float(cfg.enc_layers))
+    if cfg.family == "moe" and cfg.moe.first_dense_layers:
+        fd = cfg.moe.first_dense_layers
+        return (r(cfg, num_layers=fd + 2), 2.0, r(cfg, num_layers=fd + 4),
+                4.0, float(cfg.num_layers - fd))
+    return (r(cfg, num_layers=2), 2.0, r(cfg, num_layers=4), 4.0,
+            float(cfg.num_layers))
+
+
+_METRICS = ("flops", "bytes_accessed", "collective_total")
+
+
+def _extrapolate(mA: Dict, uA: float, mB: Dict, uB: float,
+                 uF: float) -> Dict:
+    out = {}
+    for k in _METRICS:
+        slope = (mB[k] - mA[k]) / (uB - uA)
+        out[k] = mA[k] + (uF - uA) * slope
+        out[k + "_per_layer"] = slope
+    coll = {}
+    for kind in mA["collective_bytes"]:
+        slope = (mB["collective_bytes"][kind]
+                 - mA["collective_bytes"][kind]) / (uB - uA)
+        coll[kind] = mA["collective_bytes"][kind] + (uF - uA) * slope
+    out["collective_bytes"] = coll
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape) -> float:
+    """MODEL_FLOPS (global): 6*N_active*D for train, 2*N_active*D for
+    prefill, 2*N_active*B for one decode step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_one(arch: str, shape_name: str, multi_pod: bool = False,
+                 verbose: bool = True, variant: str = "",
+                 **dryrun_kw) -> Dict:
+    from repro.launch import dryrun as dr
+    from repro.configs import registry
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    cfgA, uA, cfgB, uB, uF = probe_pair(cfg)
+
+    def run(probe_cfg):
+        # temporarily register the probe clone under its own name
+        registry._ARCHS[probe_cfg.name] = probe_cfg
+        try:
+            return dr.dryrun_one(probe_cfg.name, shape_name, multi_pod,
+                                 verbose=False, unroll=True, **dryrun_kw)
+        finally:
+            registry._ARCHS.pop(probe_cfg.name, None)
+
+    mA = run(dataclasses.replace(cfgA, name=arch + "#probeA"))
+    mB = run(dataclasses.replace(cfgB, name=arch + "#probeB"))
+    full = _extrapolate(mA, uA, mB, uB, uF)
+
+    n_dev = 512 if multi_pod else 256
+    terms = {
+        "compute_s": full["flops"] / PEAK_FLOPS,
+        "memory_s": full["bytes_accessed"] / HBM_BW,
+        "collective_s": full["collective_total"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_dev
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "variant": variant,
+        "hlo_flops_per_dev": full["flops"],
+        "hlo_bytes_per_dev": full["bytes_accessed"],
+        "collective_bytes_per_dev": full["collective_total"],
+        "collective_breakdown": full["collective_bytes"],
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / full["flops"] if full["flops"] else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "mfu_bound": mf / PEAK_FLOPS / max(terms.values())
+        if max(terms.values()) else 0.0,
+        "probe_compile_s": mA["compile_s"] + mB["compile_s"],
+    }
+    if verbose:
+        print(f"[roofline] {arch} x {shape_name}"
+              + (f" [{variant}]" if variant else "") + ": "
+              f"compute={terms['compute_s']:.3e}s "
+              f"memory={terms['memory_s']:.3e}s "
+              f"collective={terms['collective_s']:.3e}s "
+              f"dominant={rec['dominant']} "
+              f"useful={rec['useful_ratio']:.2f} "
+              f"mfu_bound={rec['mfu_bound']:.2%}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    results, failures = [], []
+    for a in archs:
+        for s in shapes:
+            try:
+                results.append(roofline_one(a, s, args.multi_pod))
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, repr(e)[:300]))
+                print(f"[roofline] {a} x {s}: FAIL {e!r}", file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f,
+                      indent=1)
+    print(f"[roofline] {len(results)} OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

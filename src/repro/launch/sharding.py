@@ -1,0 +1,178 @@
+"""PartitionSpec rule engine: maps param/cache/input pytrees to
+NamedShardings for the production mesh (DESIGN.md §5).
+
+Megatron-style tensor parallelism on the "model" axis (column-sharded
+QKV/up/gate, row-sharded O/down), vocab-sharded embeddings, expert
+f-sharding for MoE, head-sharded SSD; batch shards over ("pod","data").
+
+Every rule is divisibility-guarded: a dim that the model axis does not
+divide falls back to replication (e.g. smollm's 15 query heads), so ANY
+architecture lowers — suboptimally sharded beats un-lowerable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# leaf-w parents whose LAST dim is column-sharded over "model"
+_COL = {"wq", "wk", "wv", "gate", "up"}
+# leaf-w parents whose -2 dim is row-sharded over "model"
+_ROW = {"wo", "down"}
+# replicated small params
+_REPL = {"router", "w_dkv", "ckv_norm", "B_proj", "C_proj", "conv_B",
+         "conv_C", "conv_bB", "conv_bC", "frontend_proj"}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _mk(ndim: int, assignments) -> P:
+    """assignments: {dim_index (may be negative): axis-or-tuple}"""
+    spec = [None] * ndim
+    for d, ax in assignments.items():
+        spec[d % ndim] = ax
+    return P(*spec)
+
+
+def _div(shape, dim: int, size: int) -> bool:
+    return size > 0 and shape[dim % len(shape)] % size == 0
+
+
+def param_spec(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ArchConfig, model_size: int) -> P:
+    if not shape:
+        return P()
+    keys = path_keys
+    leaf = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    nd = len(shape)
+
+    def col(dim=-1):
+        return _mk(nd, {dim: "model"}) if _div(shape, dim, model_size) \
+            else P()
+
+    if leaf in _REPL or parent in _REPL:
+        return P()
+    if leaf == "table":                       # [V, d] (possibly stacked)
+        return col(-2)
+    if leaf == "head":                        # [d, V]
+        return col(-1)
+    if leaf in ("w", "b") and parent in _COL:
+        return col(-1)
+    if leaf == "w" and parent in _ROW:
+        return col(-2)
+    if leaf == "b" and parent in _ROW:
+        return P()
+    if leaf == "wq":                          # MLA direct q [d, H*qk]
+        return col(-1)
+    if leaf == "wo":                          # MLA o proj [H*v, d]
+        return col(-2)
+    if leaf in ("w_uk", "w_uv"):              # [lora, H, dim]
+        return _mk(nd, {-2: "model"}) if _div(shape, -2, model_size) \
+            else P()
+    if leaf in ("w_gate", "w_up"):            # [E, d, f]
+        return col(-1)
+    if leaf == "w_down":                      # [E, f, d]
+        return col(-2)
+    if leaf in ("z_proj", "x_proj", "dt_proj", "conv_x", "conv_bx",
+                "A_log", "D", "dt_bias"):
+        return col(-1)
+    if leaf == "out_proj":                    # [di, d]
+        return col(-2)
+    if leaf == "scale" and parent == "norm" and "mixer" in keys:
+        return col(-1)                        # mamba gated-norm over di
+    return P()
+
+
+def partition_params(shape_tree, cfg: ArchConfig, mesh,
+                     model_size: Optional[int] = None):
+    """model_size=1 => pure data parallelism (params fully replicated);
+    the dp_only §Perf variant for small models shards the batch over the
+    model axis instead (see _batch_axes_spec(dp_only=True))."""
+    model_size = model_size if model_size is not None \
+        else mesh.shape["model"]
+
+    def f(path, leaf):
+        spec = param_spec(_path_keys(path), tuple(leaf.shape), cfg,
+                          model_size)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+
+# ------------------------------------------------------------- caches
+def _batch_axes_spec(mesh, batch: int, dp_only: bool = False):
+    names = (("pod", "data", "model") if dp_only else ("pod", "data"))
+    axes = tuple(a for a in mesh.axis_names if a in names)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None                               # e.g. long_500k batch=1
+
+
+def cache_spec(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh, batch: int, dp_only: bool = False) -> P:
+    leaf = path_keys[-1]
+    nd = len(shape)
+    b_ax = _batch_axes_spec(mesh, batch, dp_only)
+    model = mesh.shape["model"]
+
+    def mk(assign):
+        ok = {}
+        for d, ax in assign.items():
+            if ax is None:
+                continue
+            if ax == "model" and (dp_only or not _div(shape, d, model)):
+                continue           # dp_only: model axis carries batch
+            ok[d] = ax
+        return _mk(nd, ok)
+
+    if leaf in ("k", "v"):                    # [.., B, M, kvH, hd]
+        return mk({-4: b_ax, -2: "model"})
+    if leaf in ("ckv", "krope"):              # [.., B, M, r]
+        return mk({-3: b_ax})
+    if leaf == "conv_x":                      # [.., B, K-1, di]
+        return mk({-3: b_ax, -1: "model"})
+    if leaf in ("conv_B", "conv_C"):
+        return mk({-3: b_ax})
+    if leaf == "ssm":                         # [.., B, H, P, N]
+        return mk({-4: b_ax, -3: "model"})
+    if leaf == "enc_out":                     # [B, T, d]
+        return mk({-3: b_ax})
+    return P()                                # pos, idx
+
+
+def partition_cache(shape_tree, mesh, batch: int, dp_only: bool = False):
+    def f(path, leaf):
+        spec = cache_spec(_path_keys(path), tuple(leaf.shape), mesh,
+                          batch, dp_only)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+
+# ------------------------------------------------------------- inputs
+def batch_input_sharding(mesh, batch: int, ndim: int,
+                         dp_only: bool = False) -> NamedSharding:
+    b_ax = _batch_axes_spec(mesh, batch, dp_only)
+    spec = [None] * ndim
+    if b_ax is not None:
+        spec[0] = b_ax
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def partition_batch(batch_tree, mesh, dp_only: bool = False):
+    def f(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        return batch_input_sharding(mesh, b, leaf.ndim, dp_only)
+    return jax.tree.map(f, batch_tree)

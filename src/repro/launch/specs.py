@@ -1,0 +1,92 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+for params, optimizer state, batches and KV caches — weak-type-correct,
+shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models.api import get_model
+from repro.models.runtime import RuntimeOptions
+from repro.training.optimizer import AdamW, constant_schedule
+
+
+def runtime_for(cfg: ArchConfig, shape: InputShape, model_axis: int,
+                dtype=jnp.bfloat16, absorbed_mla: bool = False
+                ) -> RuntimeOptions:
+    """Pick lowering-time options for an (arch, shape, mesh) combo."""
+    kv_mult = 1
+    if cfg.n_kv_heads and cfg.n_kv_heads < model_axis \
+            and model_axis % cfg.n_kv_heads == 0:
+        kv_mult = model_axis // cfg.n_kv_heads
+    window = 0
+    if shape.name == "long_500k" and cfg.n_heads:
+        # attention archs need sub-quadratic handling at 524k: sliding
+        # window (dense/moe/vlm/encdec and the hybrid's shared attention).
+        window = cfg.long_context_window
+    return RuntimeOptions(kv_mult=kv_mult, impl="xla",
+                          remat=(shape.kind == "train"), window=window,
+                          absorbed_mla=absorbed_mla, dtype=dtype)
+
+
+def param_shapes(cfg: ArchConfig, rt: RuntimeOptions):
+    model = get_model(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: model.init(k, cfg, rt), key)
+
+
+def opt_shapes(params, opt: AdamW):
+    return jax.eval_shape(opt.init, params)
+
+
+def default_optimizer() -> AdamW:
+    return AdamW(lr=constant_schedule(3e-4))
+
+
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return max(1, seq_len - cfg.n_prefix_tokens)
+    return seq_len
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    """Abstract training/prefill batch for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    St = _text_len(cfg, S)
+    out = {"tokens": jax.ShapeDtypeStruct((B, St), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.n_prefix_tokens and cfg.frontend_dim:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix_tokens, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+def cache_shapes(cfg: ArchConfig, rt: RuntimeOptions, shape: InputShape):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, rt, shape.global_batch,
+                                 shape.seq_len))
+
+
+def decode_token_spec(shape: InputShape):
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, rt: RuntimeOptions,
+                opt: Optional[AdamW] = None) -> Tuple:
+    """All abstract step inputs for (arch x shape): returns a tuple of
+    pytrees matching the lowered step's signature."""
+    params = param_shapes(cfg, rt)
+    if shape.kind == "train":
+        opt = opt or default_optimizer()
+        return (params, opt_shapes(params, opt), batch_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape))
+    return (params, cache_shapes(cfg, rt, shape), decode_token_spec(shape))

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+CPU-runnable end-to-end:   PYTHONPATH=src python -m repro.launch.train \
+    --arch smollm-360m-reduced --steps 50 --batch 8 --seq 128
+Production lowering check: add --dry-run (delegates to launch/dryrun.py,
+which forces the 512-device host platform in its own process).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m-reduced")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile on the production mesh instead")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        return subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", args.arch.replace("-reduced", ""),
+             "--shape", "train_4k", "--both-meshes"])
+
+    from repro.configs.registry import get_config
+    from repro.models.runtime import RuntimeOptions
+    from repro.training import checkpoint
+    from repro.training.data import lm_batches, audio_frames
+    from repro.training.train_loop import train_lm
+
+    cfg = get_config(args.arch)
+    rt = RuntimeOptions()
+    base = lm_batches(cfg.vocab_size, args.batch, args.seq,
+                      seed=args.seed)
+
+    def batches():
+        for b in base:
+            if cfg.n_prefix_tokens and cfg.frontend_dim:
+                b = dict(b)
+                b["prefix_embeds"] = audio_frames(
+                    args.batch, cfg.n_prefix_tokens, cfg.frontend_dim,
+                    seed=args.seed)
+                if cfg.family == "vlm":
+                    import numpy as np
+                    b["labels"] = np.concatenate(
+                        [np.full((args.batch, cfg.n_prefix_tokens), -1,
+                                 np.int32), b["labels"]], axis=1)
+            yield b
+
+    t0 = time.time()
+    params, losses = train_lm(
+        cfg, rt, batches(), steps=args.steps, lr=args.lr, seed=args.seed,
+        callback=lambda i, l: print(f"step {i:5d} loss {l:.4f}",
+                                    flush=True))
+    dt = time.time() - t0
+    print(json.dumps({"arch": args.arch, "steps": args.steps,
+                      "first_loss": losses[0], "last_loss": losses[-1],
+                      "wall_s": round(dt, 1),
+                      "steps_per_s": round(args.steps / dt, 3)}))
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, params,
+                        {"arch": args.arch, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Family-dispatching model API.
+
+    model = get_model(cfg)
+    params = model.init(key, cfg, rt)
+    logits, aux = model.forward(params, tokens, cfg, rt, prefix_embeds=None)
+    logits, cache = model.prefill(...)
+    logits, cache = model.decode_step(params, cache, token, cfg, rt)
+    cache = model.init_cache(cfg, rt, batch, seq_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+_TRANSFORMER = ModelApi(
+    init=transformer.init_lm,
+    forward=transformer.forward,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    init_cache=transformer.init_cache,
+)
+
+_HYBRID = ModelApi(
+    init=hybrid.init_hybrid,
+    forward=hybrid.forward,
+    prefill=hybrid.prefill,
+    decode_step=hybrid.decode_step,
+    init_cache=hybrid.init_cache,
+)
+
+_ENCDEC = ModelApi(
+    init=encdec.init_encdec,
+    forward=encdec.forward,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+    init_cache=encdec.init_cache,
+)
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm", "ssm"):
+        return _TRANSFORMER
+    if cfg.family == "hybrid":
+        return _HYBRID
+    if cfg.family == "encdec":
+        return _ENCDEC
+    raise ValueError(f"unknown family {cfg.family!r}")

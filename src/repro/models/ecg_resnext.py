@@ -1,0 +1,118 @@
+"""1-D "stripe" ResNeXt ECG classifiers — the paper's model-zoo family.
+
+§4.1.1: "a state-of-art convolutional neural network, by modifying the
+kernel in the convolutional layer in ResNeXt from 2-D patch to 1-D stripe,
+individually for each single lead ECG clip", varying first-layer filters
+{8,16,32,64,128} and residual blocks {2,4,8,16}.
+
+Deviation (DESIGN.md §2): BatchNorm is replaced with GroupNorm so the model
+is stateless (no running statistics) — simpler to serve and numerically
+equivalent for our synthetic task.
+
+x: [B, L, 1] single-lead clip  ->  logits [B, 2] (critical / stable).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.ecg_zoo import EcgModelSpec
+from repro.kernels import ops
+from repro.models.layers import truncated_normal_init
+
+
+def _init_conv(key, k: int, cin: int, cout: int, groups: int = 1,
+               dtype=jnp.float32):
+    return {"w": truncated_normal_init(key, (k, cin // groups, cout),
+                                       1.0, dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _init_gn(c: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _group_norm(p, x: jax.Array, groups: int = 4,
+                eps: float = 1e-5) -> jax.Array:
+    B, L, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, L, g, C // g)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, L, C) * p["scale"] + p["bias"]
+
+
+def init_ecg(key, spec: EcgModelSpec, dtype=jnp.float32) -> Dict:
+    W = spec.width
+    keys = jax.random.split(key, 3 * spec.blocks + 3)
+    params = {
+        "stem": _init_conv(keys[0], spec.kernel_size, 1, W, dtype=dtype),
+        "stem_gn": _init_gn(W, dtype),
+        "blocks": [],
+        "head": {"w": truncated_normal_init(keys[1], (W, 2), 1.0, dtype),
+                 "b": jnp.zeros((2,), dtype)},
+    }
+    card = spec.cardinality
+    for i in range(spec.blocks):
+        k0, k1, k2 = keys[2 + 3 * i: 5 + 3 * i]
+        inner = max(card, W // 2)
+        inner -= inner % card
+        params["blocks"].append({
+            "reduce": _init_conv(k0, 1, W, inner, dtype=dtype),
+            "gn1": _init_gn(inner, dtype),
+            "stripe": _init_conv(k1, spec.kernel_size, inner, inner,
+                                 groups=card, dtype=dtype),
+            "gn2": _init_gn(inner, dtype),
+            "expand": _init_conv(k2, 1, inner, W, dtype=dtype),
+            "gn3": _init_gn(W, dtype),
+        })
+    return params
+
+
+def ecg_apply(params: Dict, x: jax.Array, spec: EcgModelSpec,
+              impl: str = "xla") -> jax.Array:
+    """x: [B, L, 1] -> logits [B, 2]."""
+    h = ops.conv1d(x, params["stem"]["w"], params["stem"]["b"], stride=2,
+                   impl=impl)
+    h = jax.nn.relu(_group_norm(params["stem_gn"], h))
+    card = spec.cardinality
+    for i, blk in enumerate(params["blocks"]):
+        stride = 2 if i % 2 == 0 else 1
+        r = ops.conv1d(h, blk["reduce"]["w"], blk["reduce"]["b"], impl=impl)
+        r = jax.nn.relu(_group_norm(blk["gn1"], r))
+        r = ops.conv1d(r, blk["stripe"]["w"], blk["stripe"]["b"],
+                       stride=stride, groups=card, impl=impl)
+        r = jax.nn.relu(_group_norm(blk["gn2"], r))
+        r = ops.conv1d(r, blk["expand"]["w"], blk["expand"]["b"], impl=impl)
+        r = _group_norm(blk["gn3"], r)
+        shortcut = h[:, ::stride] if stride > 1 else h
+        h = jax.nn.relu(shortcut[:, :r.shape[1]] + r)
+    pooled = jnp.mean(h, axis=1)                       # [B, W]
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def ecg_macs(spec: EcgModelSpec) -> float:
+    """Analytic multiply-accumulate count (the MACS field of the paper's
+    Table-3 model profile)."""
+    L = spec.input_len / 2                              # after stem stride
+    W, K, card = spec.width, spec.kernel_size, spec.cardinality
+    macs = spec.input_len / 2 * K * W                   # stem
+    for i in range(spec.blocks):
+        stride = 2 if i % 2 == 0 else 1
+        inner = max(card, W // 2)
+        inner -= inner % card
+        macs += L * W * inner                           # reduce 1x1
+        L = L / stride
+        macs += L * K * inner * inner / card            # grouped stripe
+        macs += L * inner * W                           # expand 1x1
+    macs += W * 2
+    return float(macs)
+
+
+def ecg_param_count(params: Dict) -> int:
+    return sum(a.size for a in jax.tree.leaves(params))

@@ -1,0 +1,183 @@
+"""Seamless-M4T-style encoder-decoder backbone (audio -> text).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed audio frame embeddings [B, T_a, frontend_dim].  The decoder is
+a causal transformer with self-attention (cached at decode time) and
+cross-attention over the encoder output (cross K/V precomputed into the
+cache at prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (embed, init_embedding, init_linear,
+                                 init_rmsnorm, init_swiglu, linear, rms_norm,
+                                 swiglu, unembed)
+from repro.models.runtime import RuntimeOptions
+
+
+def init_encdec(key, cfg: ArchConfig, rt: RuntimeOptions):
+    keys = jax.random.split(key, 5)
+
+    def enc_block(kk):
+        k1, k2 = jax.random.split(kk)
+        return {"ln1": init_rmsnorm(cfg.d_model, rt.dtype),
+                "attn": attn.init_gqa(k1, cfg, rt.dtype, rt.kv_mult),
+                "ln2": init_rmsnorm(cfg.d_model, rt.dtype),
+                "mlp": init_swiglu(k2, cfg.d_model, cfg.d_ff, rt.dtype)}
+
+    def dec_block(kk):
+        k1, k2, k3 = jax.random.split(kk, 3)
+        return {"ln1": init_rmsnorm(cfg.d_model, rt.dtype),
+                "self": attn.init_gqa(k1, cfg, rt.dtype, rt.kv_mult),
+                "ln_x": init_rmsnorm(cfg.d_model, rt.dtype),
+                "cross": attn.init_cross(k2, cfg, rt.dtype, rt.kv_mult),
+                "ln2": init_rmsnorm(cfg.d_model, rt.dtype),
+                "mlp": init_swiglu(k3, cfg.d_model, cfg.d_ff, rt.dtype)}
+
+    return {
+        "frontend_proj": init_linear(keys[0], cfg.frontend_dim, cfg.d_model,
+                                     rt.dtype),
+        "embed": init_embedding(keys[1], cfg.padded_vocab, cfg.d_model,
+                                rt.dtype, tied=cfg.tie_embeddings),
+        "enc": jax.vmap(enc_block)(jax.random.split(keys[2],
+                                                    cfg.enc_layers)),
+        "dec": jax.vmap(dec_block)(jax.random.split(keys[3],
+                                                    cfg.dec_layers)),
+        "enc_norm": init_rmsnorm(cfg.d_model, rt.dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, rt.dtype),
+    }
+
+
+def encode(params, audio_embeds: jax.Array, cfg: ArchConfig,
+           rt: RuntimeOptions) -> jax.Array:
+    x = linear(params["frontend_proj"], audio_embeds.astype(rt.dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, p_l):
+        h = rms_norm(carry, p_l["ln1"], cfg.norm_eps)
+        y, _ = attn.gqa_apply(p_l["attn"], h, positions, cfg,
+                              causal=False, window=0, kv_mult=rt.kv_mult,
+                              impl=rt.impl, chunk=rt.attn_chunk,
+                              unroll=rt.scan_unroll)
+        xc = carry + y
+        h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+        return xc + swiglu(p_l["mlp"], h), None
+
+    if rt.remat:
+        body = jax.checkpoint(body)
+    x, _ = _scan(rt, body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p_l, x, enc_out, positions, cfg, rt, mode, c_l, cache_pos,
+               cache_idx):
+    dec = mode == "decode"
+    h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    y, new_kv = attn.gqa_apply(
+        p_l["self"], h, positions, cfg,
+        cache=c_l if dec else None,
+        cache_pos=cache_pos if dec else None,
+        cache_idx=cache_idx if dec else None,
+        window=rt.eff_window(cfg), causal=True, kv_mult=rt.kv_mult,
+        impl=rt.impl, chunk=rt.attn_chunk, unroll=rt.scan_unroll)
+    x = x + y
+    h = rms_norm(x, p_l["ln_x"], cfg.norm_eps)
+    x = x + attn.cross_apply(p_l["cross"], h, enc_out, cfg,
+                             kv_mult=rt.kv_mult, impl=rt.impl)
+    h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    x = x + swiglu(p_l["mlp"], h)
+    return x, (None if mode == "train" else new_kv)
+
+
+def _decoder(params, x, enc_out, positions, cfg, rt, mode, cache,
+             cache_pos, cache_idx):
+    c_dec = cache["self"] if cache is not None else None
+
+    def body(carry, xs):
+        p_l, c_l = xs if c_dec is not None else (xs, None)
+        return _dec_block(p_l, carry, enc_out, positions, cfg, rt, mode,
+                          c_l, cache_pos, cache_idx)
+
+    if rt.remat:
+        body = jax.checkpoint(body)
+    xs = (params["dec"], c_dec) if c_dec is not None else params["dec"]
+    return _scan(rt, body, x, xs)
+
+
+def forward(params, tokens: jax.Array, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Teacher-forced: encoder over audio embeds, decoder over tokens."""
+    enc_out = encode(params, prefix_embeds, cfg, rt)
+    x = embed(params["embed"], tokens).astype(rt.dtype)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = _decoder(params, x, enc_out, positions, cfg, rt, "train", None,
+                    None, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, tokens: jax.Array, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds: Optional[jax.Array] = None, max_len=None):
+    from repro.models.transformer import fit_kv_cache
+    enc_out = encode(params, prefix_embeds, cfg, rt)
+    x = embed(params["embed"], tokens).astype(rt.dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, kv = _decoder(params, x, enc_out, positions, cfg, rt, "prefill",
+                     None, None, None)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+
+    w = rt.eff_window(cfg)
+    target = max_len or S + 128
+    M = min(target, w) if w else target
+    kv, pos = fit_kv_cache(kv, S, M)
+    cache = {"self": kv, "enc_out": enc_out, "pos": pos,
+             "idx": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, rt: RuntimeOptions, batch: int,
+               seq_len: int, enc_len: Optional[int] = None):
+    """Empty decode cache (for dry-run input_specs)."""
+    w = rt.eff_window(cfg)
+    M = min(seq_len, w) if w else seq_len
+    enc_len = enc_len or cfg.n_prefix_tokens
+    nkv = cfg.n_kv_heads * rt.kv_mult
+    L = cfg.dec_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, M, nkv, cfg.head_dim), rt.dtype),
+                 "v": jnp.zeros((L, batch, M, nkv, cfg.head_dim), rt.dtype)},
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), rt.dtype),
+        "pos": jnp.full((M,), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, token: jax.Array, cfg: ArchConfig,
+                rt: RuntimeOptions):
+    x = embed(params["embed"], token[:, None]).astype(rt.dtype)
+    positions = cache["idx"][None].astype(jnp.int32)
+    x, kv = _decoder(params, x, cache["enc_out"], positions, cfg, rt,
+                     "decode", cache, cache["pos"], cache["idx"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    M = cache["pos"].shape[0]
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], positions, (cache["idx"] % M,))
+    return logits, {"self": kv, "enc_out": cache["enc_out"],
+                    "pos": new_pos, "idx": cache["idx"] + 1}
+
+
+def _scan(rt, body, carry, xs, **kw):
+    """lax.scan with optional full unroll (roofline probes)."""
+    import jax as _jax
+    return _jax.lax.scan(body, carry, xs,
+                         unroll=True if getattr(rt, "scan_unroll", False)
+                         else 1, **kw)

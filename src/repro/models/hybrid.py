@@ -1,0 +1,218 @@
+"""Zamba2-style hybrid assembly: a Mamba2 backbone with ONE parameter-shared
+attention+MLP block invoked every `shared_attn_every` layers.
+
+Layer schedule for L=81, k=6:  13 super-blocks of (6 mamba + shared-attn
+invocation) + 3 tail mamba layers.  The shared block's *parameters* are
+reused across invocations, but each invocation has its own KV cache
+(13 × [B, M, kvH, hd]).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed, init_embedding, init_rmsnorm,
+                                 init_swiglu, rms_norm, swiglu, unembed)
+from repro.models.runtime import RuntimeOptions
+
+
+def _schedule(cfg: ArchConfig) -> Tuple[int, int, int]:
+    k = cfg.shared_attn_every
+    ns = cfg.num_layers // k
+    tail = cfg.num_layers - ns * k
+    return ns, k, tail
+
+
+def init_hybrid(key, cfg: ArchConfig, rt: RuntimeOptions):
+    ns, k, tail = _schedule(cfg)
+    keys = jax.random.split(key, 6)
+
+    def init_mamba_block(kk):
+        return {"ln1": init_rmsnorm(cfg.d_model, rt.dtype),
+                "mixer": ssm_mod.init_mamba2(kk, cfg, rt.dtype)}
+
+    main_keys = jax.random.split(keys[0], ns * k).reshape(ns, k, 2)
+    params = {
+        "embed": init_embedding(keys[1], cfg.padded_vocab, cfg.d_model,
+                                rt.dtype, tied=cfg.tie_embeddings),
+        "final_norm": init_rmsnorm(cfg.d_model, rt.dtype),
+        "mamba_main": jax.vmap(jax.vmap(init_mamba_block))(main_keys),
+        "shared": {
+            "ln1": init_rmsnorm(cfg.d_model, rt.dtype),
+            "attn": attn.init_gqa(keys[2], cfg, rt.dtype, rt.kv_mult),
+            "ln2": init_rmsnorm(cfg.d_model, rt.dtype),
+            "mlp": init_swiglu(keys[3], cfg.d_model, cfg.d_ff, rt.dtype),
+        },
+    }
+    if tail:
+        tail_keys = jax.random.split(keys[4], tail)
+        params["mamba_tail"] = jax.vmap(init_mamba_block)(tail_keys)
+    return params
+
+
+def init_cache(cfg: ArchConfig, rt: RuntimeOptions, batch: int,
+               seq_len: int):
+    ns, k, tail = _schedule(cfg)
+    w = rt.eff_window(cfg)
+    M = min(seq_len, w) if w else seq_len
+    one_ssm = ssm_mod.ssm_cache_init(cfg, batch, rt.dtype)
+
+    def stack(n, tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), tree)
+
+    nkv = cfg.n_kv_heads * rt.kv_mult
+    cache = {
+        "mamba_main": stack(ns, stack(k, one_ssm)),
+        "attn": {
+            "k": jnp.zeros((ns, batch, M, nkv, cfg.head_dim), rt.dtype),
+            "v": jnp.zeros((ns, batch, M, nkv, cfg.head_dim), rt.dtype)},
+        "pos": jnp.full((M,), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["mamba_tail"] = stack(tail, one_ssm)
+    return cache
+
+
+def _mamba_block(p, x, cfg, rt, mode, cache_l):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, new_c = ssm_mod.mamba2_apply(
+        p["mixer"], h, cfg, cache=cache_l if mode == "decode" else None,
+        return_cache=(mode == "prefill"), impl=rt.impl)
+    return x + y, (None if mode == "train" else new_c)
+
+
+def _shared_block(p, x, cfg, rt, positions, mode, cache_l, cache_pos,
+                  cache_idx):
+    dec = mode == "decode"
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, new_c = attn.gqa_apply(
+        p["attn"], h, positions, cfg,
+        cache=cache_l if dec else None,
+        cache_pos=cache_pos if dec else None,
+        cache_idx=cache_idx if dec else None,
+        window=rt.eff_window(cfg), causal=True, kv_mult=rt.kv_mult,
+        impl=rt.impl, chunk=rt.attn_chunk, unroll=rt.scan_unroll)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + swiglu(p["mlp"], h), (None if mode == "train" else new_c)
+
+
+def _backbone(params, x, cfg, rt, positions, mode, cache, cache_pos,
+              cache_idx):
+    ns, k, tail = _schedule(cfg)
+
+    def inner(carry, xs):
+        p_l, c_l = xs
+        out, new_c = _mamba_block(p_l, carry, cfg, rt, mode, c_l)
+        return out, new_c
+
+    def super_body(carry, xs):
+        x_c = carry
+        (p_m, c_m), c_a = xs
+        x_c, new_cm = _scan(rt, inner, x_c, (p_m, c_m))
+        x_c, new_ca = _shared_block(params["shared"], x_c, cfg, rt,
+                                    positions, mode, c_a, cache_pos,
+                                    cache_idx)
+        return x_c, (new_cm, new_ca)
+
+    if rt.remat:
+        super_body = jax.checkpoint(super_body)
+
+    c_main = cache["mamba_main"] if cache is not None else None
+    c_attn = cache["attn"] if cache is not None else None
+    if c_main is None:
+        # scan without caches: feed params only
+        def super_body_nc(carry, p_m):
+            x_c = carry
+            def inner_nc(c2, p_l):
+                out, new_c = _mamba_block(p_l, c2, cfg, rt, mode, None)
+                return out, new_c
+            x_c, new_cm = _scan(rt, inner_nc, x_c, p_m)
+            x_c, new_ca = _shared_block(params["shared"], x_c, cfg, rt,
+                                        positions, mode, None, cache_pos,
+                                        cache_idx)
+            return x_c, (new_cm, new_ca)
+        if rt.remat:
+            super_body_nc = jax.checkpoint(super_body_nc)
+        x, (new_main, new_attn) = _scan(rt, 
+            super_body_nc, x, params["mamba_main"])
+    else:
+        x, (new_main, new_attn) = _scan(rt, 
+            super_body, x, ((params["mamba_main"], c_main), c_attn))
+
+    new_tail = None
+    if tail:
+        c_tail = cache["mamba_tail"] if cache is not None else None
+        def tail_body(carry, xs):
+            p_l, c_l = xs if c_tail is not None else (xs, None)
+            return _mamba_block(p_l, carry, cfg, rt, mode, c_l)
+        xs = ((params["mamba_tail"], c_tail) if c_tail is not None
+              else params["mamba_tail"])
+        x, new_tail = _scan(rt, tail_body, x, xs)
+    return x, new_main, new_attn, new_tail
+
+
+def forward(params, tokens, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds=None):
+    x = embed(params["embed"], tokens).astype(rt.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, *_ = _backbone(params, x, cfg, rt, positions, "train", None, None,
+                      None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, tokens, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds=None, max_len=None):
+    from repro.models.transformer import fit_kv_cache
+    x = embed(params["embed"], tokens).astype(rt.dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, new_main, new_attn, new_tail = _backbone(
+        params, x, cfg, rt, positions, "prefill", None, None, None)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+
+    ns, k, tail = _schedule(cfg)
+    w = rt.eff_window(cfg)
+    target = max_len or S + 128
+    M = min(target, w) if w else target
+    kv, pos = fit_kv_cache(new_attn, S, M)
+    cache = {"mamba_main": new_main, "attn": kv, "pos": pos,
+             "idx": jnp.asarray(S, jnp.int32)}
+    if tail:
+        cache["mamba_tail"] = new_tail
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: ArchConfig, rt: RuntimeOptions):
+    x = embed(params["embed"], token[:, None]).astype(rt.dtype)
+    positions = cache["idx"][None].astype(jnp.int32)
+    x, new_main, new_attn, new_tail = _backbone(
+        params, x, cfg, rt, positions, "decode", cache, cache["pos"],
+        cache["idx"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    M = cache["pos"].shape[0]
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], positions, (cache["idx"] % M,))
+    new_cache = {"mamba_main": new_main, "attn": new_attn, "pos": new_pos,
+                 "idx": cache["idx"] + 1}
+    if "mamba_tail" in cache:
+        new_cache["mamba_tail"] = new_tail
+    return logits, new_cache
+
+
+def _scan(rt, body, carry, xs, **kw):
+    """lax.scan with optional full unroll (roofline probes)."""
+    import jax as _jax
+    return _jax.lax.scan(body, carry, xs,
+                         unroll=True if getattr(rt, "scan_unroll", False)
+                         else 1, **kw)

@@ -1,0 +1,112 @@
+"""Shared layer primitives: norms, linears, rotary embeddings, SwiGLU MLP.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Each primitive
+exposes ``init_*`` (returns params), an apply function, and the sharding
+spec builders live in ``repro.launch.sharding`` (they mirror these pytrees).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    stddev = scale / max(1.0, (shape[0] if shape else 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32,
+                bias: bool = False):
+    p = {"w": truncated_normal_init(key, (d_in, d_out), 1.0, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- rope
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Half-rotation RoPE.  x: [..., seq, heads, head_dim]; positions
+    broadcastable to x.shape[:-2] (usually [batch, seq] or [seq])."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # [..,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32,
+                bias: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype, bias),
+        "up": init_linear(k2, d_model, d_ff, dtype, bias),
+        "down": init_linear(k3, d_ff, d_model, dtype, bias),
+    }
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) *
+                  linear(p["up"], x))
+
+
+# ---------------------------------------------------------------- embed
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32,
+                   tied: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {"table": truncated_normal_init(k1, (vocab, d_model), 1.0, dtype)}
+    if not tied:
+        p["head"] = truncated_normal_init(k2, (d_model, vocab), 1.0, dtype)
+    return p
+
+
+def embed(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    if "head" in p:
+        return x @ p["head"]
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------- loss
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 vocab_size: Optional[int] = None) -> jax.Array:
+    """Mean token cross-entropy; labels < 0 are masked out (and padded
+    vocab ids can never be labels)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

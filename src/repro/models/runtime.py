@@ -1,0 +1,48 @@
+"""Runtime (lowering-time) options, orthogonal to the architecture config."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeOptions:
+    """Options chosen at jit/lower time, not part of the architecture.
+
+    kv_mult:        duplicate KV heads by this factor so the model axis
+                    divides them (DESIGN.md §5); numerics-invariant.
+    impl:           kernel dispatch ("xla" | "pallas" | "pallas_interpret").
+    remat:          activation checkpointing on the layer scan (train).
+    window:         attention-window override; 0 keeps cfg.sliding_window.
+                    long_500k sets this to cfg.long_context_window for
+                    attention archs.
+    absorbed_mla:   latent-space MLA attention (decode memory optimization).
+    capacity_factor: MoE dispatch capacity factor.
+    param_dtype / compute via dtype.
+    """
+    kv_mult: int = 1
+    impl: str = "xla"
+    remat: bool = False
+    window: int = 0
+    absorbed_mla: bool = False
+    capacity_factor: float = 1.25
+    dtype: object = jnp.float32
+    # Unroll layer scans in the lowered HLO.  Needed by the roofline probes:
+    # XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    # count, so accurate FLOP/byte/collective numbers require unrolling
+    # (done on reduced-layer clones, then extrapolated — launch/roofline.py).
+    scan_unroll: bool = False
+    # ---- §Perf levers (beyond-paper optimizations) ----
+    # moe_impl "shard_map": explicit collective schedule — dispatch stays
+    # shard-local, ONE token-space all-reduce per MoE layer (vs GSPMD's
+    # capacity-space all-reduce/all-gather storm).  Requires `mesh`.
+    moe_impl: str = "gspmd"            # gspmd | shard_map
+    mesh: object = None                # jax Mesh (lowering-time only)
+    # attention chunking: online-softmax over KV blocks in pure XLA — the
+    # flash-attention insight without Pallas, so it lowers on the host
+    # platform.  0 = disabled (materialize [S,T] scores).
+    attn_chunk: int = 0
+
+    def eff_window(self, cfg) -> int:
+        return self.window or cfg.sliding_window

@@ -1,0 +1,285 @@
+"""Decoder language model assembly: dense / MoE / VLM / pure-SSM families.
+
+Layers are grouped into homogeneous SEGMENTS and ``jax.lax.scan``-ned over
+stacked per-layer params (bounded HLO size at 27-81 layers).  Three modes:
+
+  forward(...)      full-sequence teacher forcing (train / eval)
+  prefill(...)      full sequence, returns (last-token logits, decode cache)
+  decode_step(...)  one token against the cache (ring buffer if windowed)
+
+Cache pytree: {"segments": [per-segment stacked cache], "pos": [M] int32,
+"idx": () int32}.  The hybrid (Zamba2) assembly lives in hybrid.py, the
+encoder-decoder one in encdec.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed, init_embedding, init_linear,
+                                 init_rmsnorm, init_swiglu, linear, rms_norm,
+                                 swiglu, unembed)
+from repro.models.runtime import RuntimeOptions
+
+
+# ----------------------------------------------------------- segments
+def segments(cfg: ArchConfig) -> List[Tuple[str, int, int]]:
+    """[(block_type, n_layers, d_ff)] — contiguous homogeneous runs."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn_dense", cfg.num_layers, cfg.d_ff)]
+    if cfg.family == "moe":
+        m = cfg.moe
+        segs = []
+        if m.first_dense_layers:
+            segs.append(("attn_dense", m.first_dense_layers,
+                         m.dense_d_ff or cfg.d_ff))
+        segs.append(("attn_moe", cfg.num_layers - m.first_dense_layers, 0))
+        return segs
+    if cfg.family == "ssm":
+        return [("mamba", cfg.num_layers, 0)]
+    raise ValueError(f"transformer.py does not assemble family "
+                     f"{cfg.family!r}")
+
+
+# ----------------------------------------------------------- block
+def _init_block(key, cfg: ArchConfig, rt: RuntimeOptions, btype: str,
+                d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if btype == "mamba":
+        return {"ln1": init_rmsnorm(cfg.d_model, rt.dtype),
+                "mixer": ssm_mod.init_mamba2(k1, cfg, rt.dtype)}
+    a = (attn.init_mla(k1, cfg, rt.dtype) if cfg.attn_type == "mla"
+         else attn.init_gqa(k1, cfg, rt.dtype, rt.kv_mult))
+    p = {"ln1": init_rmsnorm(cfg.d_model, rt.dtype), "attn": a,
+         "ln2": init_rmsnorm(cfg.d_model, rt.dtype)}
+    if btype == "attn_dense":
+        p["mlp"] = init_swiglu(k2, cfg.d_model, d_ff, rt.dtype,
+                               cfg.attn_bias)
+    else:
+        p["mlp"] = moe_mod.init_moe(k2, cfg, rt.dtype)
+    return p
+
+
+def _apply_block(p, x, btype: str, cfg: ArchConfig, rt: RuntimeOptions,
+                 positions, mode: str, cache_l, cache_pos, cache_idx):
+    """Returns (x, new_cache_l, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if btype == "mamba":
+        y, new_c = ssm_mod.mamba2_apply(
+            p["mixer"], h, cfg, cache=cache_l if mode == "decode" else None,
+            return_cache=(mode == "prefill"), impl=rt.impl)
+        return x + y, new_c, aux
+
+    kw = dict(window=rt.eff_window(cfg), causal=True, impl=rt.impl,
+              chunk=rt.attn_chunk, unroll=rt.scan_unroll)
+    dec = mode == "decode"
+    if cfg.attn_type == "mla":
+        y, new_c = attn.mla_apply(
+            p["attn"], h, positions, cfg,
+            cache=cache_l if dec else None,
+            cache_pos=cache_pos if dec else None,
+            cache_idx=cache_idx if dec else None,
+            absorbed=rt.absorbed_mla, **kw)
+    else:
+        y, new_c = attn.gqa_apply(
+            p["attn"], h, positions, cfg,
+            cache=cache_l if dec else None,
+            cache_pos=cache_pos if dec else None,
+            cache_idx=cache_idx if dec else None,
+            kv_mult=rt.kv_mult, **kw)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if btype == "attn_dense":
+        y = swiglu(p["mlp"], h)
+    elif rt.moe_impl == "shard_map" and rt.mesh is not None:
+        y, aux = moe_mod.moe_apply_sharded(
+            p["mlp"], h, cfg, rt.mesh,
+            capacity_factor=rt.capacity_factor, impl=rt.impl)
+    else:
+        y, aux = moe_mod.moe_apply(p["mlp"], h, cfg,
+                                   capacity_factor=rt.capacity_factor,
+                                   impl=rt.impl)
+    return x + y, new_c, aux
+
+
+# ----------------------------------------------------------- LM init
+def init_lm(key, cfg: ArchConfig, rt: RuntimeOptions):
+    segs = segments(cfg)
+    keys = jax.random.split(key, len(segs) + 2)
+    params = {
+        "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model,
+                                rt.dtype, tied=cfg.tie_embeddings),
+        "final_norm": init_rmsnorm(cfg.d_model, rt.dtype),
+        "segments": [],
+    }
+    if cfg.frontend_dim:
+        params["frontend_proj"] = init_linear(
+            keys[1], cfg.frontend_dim, cfg.d_model, rt.dtype)
+    for i, (btype, n, d_ff) in enumerate(segs):
+        lkeys = jax.random.split(keys[2 + i], n)
+        params["segments"].append(jax.vmap(
+            lambda k: _init_block(k, cfg, rt, btype, d_ff))(lkeys))
+    return params
+
+
+# ----------------------------------------------------------- cache init
+def _layer_cache_shape(cfg: ArchConfig, rt: RuntimeOptions, btype: str,
+                       batch: int, M: int):
+    if btype == "mamba":
+        return ssm_mod.ssm_cache_init(cfg, batch, rt.dtype)
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, M, m.kv_lora_rank), rt.dtype),
+                "krope": jnp.zeros((batch, M, m.qk_rope_head_dim), rt.dtype)}
+    nkv = cfg.n_kv_heads * rt.kv_mult
+    return {"k": jnp.zeros((batch, M, nkv, cfg.head_dim), rt.dtype),
+            "v": jnp.zeros((batch, M, nkv, cfg.head_dim), rt.dtype)}
+
+
+def cache_len(cfg: ArchConfig, rt: RuntimeOptions, seq_len: int) -> int:
+    w = rt.eff_window(cfg)
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache(cfg: ArchConfig, rt: RuntimeOptions, batch: int,
+               seq_len: int):
+    """Empty decode cache sized for `seq_len` total positions."""
+    M = cache_len(cfg, rt, seq_len)
+    segs_c = []
+    for (btype, n, _) in segments(cfg):
+        one = _layer_cache_shape(cfg, rt, btype, batch, M)
+        segs_c.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one))
+    return {"segments": segs_c,
+            "pos": jnp.full((M,), -1, jnp.int32),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+# ----------------------------------------------------------- backbone
+def _run_segments(params, x, cfg, rt, positions, mode, cache, cache_pos,
+                  cache_idx):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_seg_caches = []
+    for si, (btype, n, d_ff) in enumerate(segments(cfg)):
+        p_seg = params["segments"][si]
+        c_seg = cache["segments"][si] if cache is not None else None
+
+        def body(carry, xs, _btype=btype, _dff=d_ff):
+            xc, auxc = carry
+            p_l, c_l = xs if c_seg is not None else (xs, None)
+            out, new_c, aux = _apply_block(
+                p_l, xc, _btype, cfg, rt, positions, mode, c_l,
+                cache_pos, cache_idx)
+            return (out, auxc + aux), (None if mode == "train" else new_c)
+
+        if rt.remat:
+            body = jax.checkpoint(body)
+        xs = (p_seg, c_seg) if c_seg is not None else p_seg
+        (x, aux_total), ys = _scan(rt, body, (x, aux_total), xs)
+        new_seg_caches.append(ys)
+    return x, aux_total, new_seg_caches
+
+
+def _embed_inputs(params, cfg, rt, tokens, prefix_embeds):
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = linear(params["frontend_proj"],
+                    prefix_embeds.astype(rt.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x.astype(rt.dtype)
+
+
+def forward(params, tokens: jax.Array, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Teacher-forced full-sequence logits.  tokens: [B, S_text];
+    prefix_embeds: [B, P, frontend_dim] (VLM/audio stubs).
+    Returns (logits [B, S_total, V], aux)."""
+    x = _embed_inputs(params, cfg, rt, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux, _ = _run_segments(params, x, cfg, rt, positions, "train",
+                              None, None, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x), aux
+
+
+def fit_kv_cache(kv, S: int, M: int, axis: int = 2):
+    """Re-layout full-prefill K/V [.., S, ..] into a ring buffer of size M
+    where slot (p % M) holds position p.  Returns (kv, pos [M])."""
+    if M == S:
+        return kv, jnp.arange(S, dtype=jnp.int32)
+    if M > S:
+        def pad(a):
+            widths = [(0, 0)] * a.ndim
+            widths[axis] = (0, M - S)
+            return jnp.pad(a, widths)
+        pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                               jnp.full((M - S,), -1, jnp.int32)])
+        return jax.tree.map(pad, kv), pos
+    kv = jax.tree.map(lambda a: a[(slice(None),) * axis + (slice(-M, None),)],
+                      kv)
+    pos = jnp.arange(S - M, S, dtype=jnp.int32)
+    kv = jax.tree.map(lambda a: jnp.roll(a, S % M, axis=axis), kv)
+    return kv, jnp.roll(pos, S % M)
+
+
+def prefill(params, tokens: jax.Array, cfg: ArchConfig, rt: RuntimeOptions,
+            prefix_embeds: Optional[jax.Array] = None,
+            max_len: Optional[int] = None):
+    """Returns (last-token logits [B, V], decode cache).  ``max_len`` sizes
+    the cache for subsequent decoding (defaults to S + 128)."""
+    x = _embed_inputs(params, cfg, rt, tokens, prefix_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, seg_caches = _run_segments(params, x, cfg, rt, positions,
+                                     "prefill", None, None, None)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+
+    M = cache_len(cfg, rt, max_len or S + 128)
+    trimmed = []
+    pos = None
+    for (btype, n, _), c in zip(segments(cfg), seg_caches):
+        if btype == "mamba":
+            trimmed.append(c)
+        else:
+            c, pos = fit_kv_cache(c, S, M)
+            trimmed.append(c)
+    if pos is None:                       # pure-SSM: no kv ring needed
+        pos = jnp.full((1,), -1, jnp.int32)
+    cache = {"segments": trimmed, "pos": pos,
+             "idx": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, token: jax.Array, cfg: ArchConfig,
+                rt: RuntimeOptions):
+    """token: [B] int32.  Returns (logits [B, V], new cache)."""
+    x = embed(params["embed"], token[:, None]).astype(rt.dtype)
+    positions = cache["idx"][None].astype(jnp.int32)
+    x, _, seg_caches = _run_segments(
+        params, x, cfg, rt, positions, "decode", cache,
+        cache["pos"], cache["idx"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    M = cache["pos"].shape[0]
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], positions, (cache["idx"] % M,))
+    return logits, {"segments": seg_caches, "pos": new_pos,
+                    "idx": cache["idx"] + 1}
+
+
+def _scan(rt, body, carry, xs, **kw):
+    """lax.scan with optional full unroll (roofline probes)."""
+    import jax as _jax
+    return _jax.lax.scan(body, carry, xs,
+                         unroll=True if getattr(rt, "scan_unroll", False)
+                         else 1, **kw)

@@ -1,0 +1,121 @@
+"""Stateful data aggregators (§3.4, Fig. 4).
+
+Multi-rate, multi-modal sensory streams are buffered per patient so the
+ensemble always sees a synchronized observation window Delta-T across all
+sensors.  Two implementations share semantics:
+
+* ``PatientAggregator`` — plain-python actor used by the serving pipeline
+  and the discrete-event simulator (arbitrary arrival patterns).
+* ``ingest_step`` / ``AggState`` — pure-functional jnp ring buffers
+  (jit-compatible) for the device-resident streaming path: state lives in
+  device arrays and is updated by a compiled step, the JAX-native analogue
+  of the paper's Ray stateful actors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------- actor implementation
+@dataclasses.dataclass
+class ModalitySpec:
+    name: str
+    rate_hz: float                 # nominal sampling rate
+    channels: int
+
+
+class PatientAggregator:
+    """Buffers per-modality samples; emits aligned windows of Delta-T."""
+
+    def __init__(self, modalities: List[ModalitySpec],
+                 window_seconds: float):
+        self.modalities = {m.name: m for m in modalities}
+        self.window = window_seconds
+        self.buffers: Dict[str, List[Tuple[float, np.ndarray]]] = {
+            m.name: [] for m in modalities}
+        self.window_start: Optional[float] = None
+
+    def ingest(self, t: float, modality: str, samples: np.ndarray) -> None:
+        if self.window_start is None:
+            self.window_start = t
+        self.buffers[modality].append((t, np.asarray(samples)))
+
+    def window_ready(self, now: float) -> bool:
+        return (self.window_start is not None
+                and now - self.window_start >= self.window)
+
+    def pop_window(self, now: float) -> Dict[str, np.ndarray]:
+        """Returns {modality: [channels, n_samples]} for the last window,
+        dropping data older than the window (noisy-environment tolerant:
+        missing samples are zero-filled to the nominal count)."""
+        out = {}
+        t0 = now - self.window
+        for name, spec in self.modalities.items():
+            want = max(1, int(round(spec.rate_hz * self.window)))
+            rows = [s for (t, s) in self.buffers[name] if t >= t0]
+            if rows:
+                arr = np.concatenate([np.atleast_2d(r) for r in rows],
+                                     axis=-1)[:, -want:]
+            else:
+                arr = np.zeros((spec.channels, 0), np.float32)
+            if arr.shape[-1] < want:             # sensor fell off: pad
+                pad = np.zeros((spec.channels, want - arr.shape[-1]),
+                               np.float32)
+                arr = np.concatenate([pad, arr], axis=-1)
+            out[name] = arr.astype(np.float32)
+            self.buffers[name] = [(t, s) for (t, s) in self.buffers[name]
+                                  if t >= t0]
+        self.window_start = now
+        return out
+
+
+# --------------------------------------------- jit-compatible ring buffer
+class AggState(NamedTuple):
+    """One modality's device-resident ring buffer for all patients."""
+    buf: jax.Array            # [n_patients, channels, capacity]
+    write_idx: jax.Array      # [n_patients] int32
+    total: jax.Array          # [n_patients] int32  samples ever written
+
+
+def agg_init(n_patients: int, channels: int, capacity: int) -> AggState:
+    return AggState(
+        buf=jnp.zeros((n_patients, channels, capacity), jnp.float32),
+        write_idx=jnp.zeros((n_patients,), jnp.int32),
+        total=jnp.zeros((n_patients,), jnp.int32))
+
+
+@jax.jit
+def ingest_step(state: AggState, patient: jax.Array,
+                samples: jax.Array) -> AggState:
+    """Append samples [channels, k] for one patient (ring semantics)."""
+    cap = state.buf.shape[-1]
+    k = samples.shape[-1]
+    idx = (state.write_idx[patient] + jnp.arange(k)) % cap
+    buf = state.buf.at[patient, :, idx].set(samples.T)
+    return AggState(
+        buf=buf,
+        write_idx=state.write_idx.at[patient].add(k) % (2 ** 30),
+        total=state.total.at[patient].add(k))
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def read_window(state: AggState, patient: jax.Array,
+                want: int) -> jax.Array:
+    """Last ``want`` samples, oldest first: [channels, want]."""
+    cap = state.buf.shape[-1]
+    end = state.write_idx[patient]
+    idx = (end - want + jnp.arange(want)) % cap
+    return state.buf[patient, :, idx].T
+
+
+def read_window_static(state: AggState, patient: int, want: int
+                       ) -> jax.Array:
+    return read_window(state, jnp.asarray(patient), want)

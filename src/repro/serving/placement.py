@@ -1,0 +1,55 @@
+"""Ensemble placement.
+
+LPT (longest-processing-time-first) greedy placement of ensemble members
+onto devices — used by the latency profiler's T_s model and by the
+pipeline's device assignment.  For the datacenter-scale zoo, the same
+logic plans which POD (mesh axis 0 slice) hosts which ensemble member —
+HOLMES' ensemble-parallelism mapped onto the multi-pod mesh (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Placement:
+    assignment: List[List[int]]       # device/pod -> member indices
+    loads: List[float]                # per device/pod total cost
+
+    @property
+    def makespan(self) -> float:
+        return max(self.loads) if self.loads else 0.0
+
+    @property
+    def imbalance(self) -> float:
+        if not self.loads or max(self.loads) == 0:
+            return 0.0
+        return max(self.loads) / (sum(self.loads) / len(self.loads))
+
+
+def lpt_placement(costs: Sequence[float], n_slots: int) -> Placement:
+    order = np.argsort(-np.asarray(costs, np.float64), kind="stable")
+    assignment: List[List[int]] = [[] for _ in range(max(1, n_slots))]
+    loads = [0.0] * max(1, n_slots)
+    for i in order:
+        j = int(np.argmin(loads))
+        assignment[j].append(int(i))
+        loads[j] += float(costs[i])
+    return Placement(assignment=assignment, loads=loads)
+
+
+def plan_pod_ensemble(member_costs: Dict[str, float], n_pods: int
+                      ) -> Dict[str, int]:
+    """Map ensemble member names -> pod index (bagging combine then needs
+    one cross-pod all-reduce of the [batch, n_classes] score — Eq. 5 as a
+    collective)."""
+    names = list(member_costs)
+    pl = lpt_placement([member_costs[n] for n in names], n_pods)
+    out = {}
+    for pod, idxs in enumerate(pl.assignment):
+        for i in idxs:
+            out[names[i]] = pod
+    return out

@@ -1,0 +1,49 @@
+"""Timestamped FIFO queues (the per-modality ensemble queues of Fig. 4)
+with waiting-time statistics for the latency profiler.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class QueueStats:
+    n_pushed: int = 0
+    n_popped: int = 0
+    total_wait: float = 0.0
+    max_wait: float = 0.0
+    max_depth: int = 0
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.n_popped if self.n_popped else 0.0
+
+
+class TimestampedQueue:
+    def __init__(self, name: str = "q"):
+        self.name = name
+        self._q: Deque[Tuple[float, Any]] = collections.deque()
+        self.stats = QueueStats()
+
+    def push(self, t: float, item: Any) -> None:
+        self._q.append((t, item))
+        self.stats.n_pushed += 1
+        self.stats.max_depth = max(self.stats.max_depth, len(self._q))
+
+    def pop(self, now: float) -> Optional[Any]:
+        if not self._q:
+            return None
+        t_in, item = self._q.popleft()
+        wait = max(0.0, now - t_in)
+        self.stats.n_popped += 1
+        self.stats.total_wait += wait
+        self.stats.max_wait = max(self.stats.max_wait, wait)
+        return item
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def waits(self) -> QueueStats:
+        return self.stats

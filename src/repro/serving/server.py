@@ -1,0 +1,101 @@
+"""Wall-clock serving server: the HTTP-ingest stand-in of Fig. 4 as a
+threaded request loop — bounded ingest queue, N device-worker threads
+draining per-model tasks, SLO accounting.
+
+The DES simulator (simulator.py) is the deterministic twin used by the
+latency profiler and benchmarks; this server is the "really runs" path
+the examples exercise (real jitted inference, real clocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServerStats:
+    served: int = 0
+    slo_violations: int = 0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def p(self, pct: float) -> float:
+        return float(np.percentile(self.latencies, pct)) \
+            if self.latencies else 0.0
+
+
+class EnsembleServer:
+    """Serves ensemble queries with a pool of worker threads (the
+    stateless-actor pool; one thread ~ one device in the CPU demo).
+
+    handler(query) -> score runs the jitted ensemble; queries are
+    (patient_id, windows dict) tuples submitted by the ingest side.
+    """
+
+    def __init__(self, handler: Callable[[Dict], float],
+                 n_workers: int = 2, slo_seconds: float = 1.0,
+                 max_queue: int = 1024):
+        self.handler = handler
+        self.slo = slo_seconds
+        self.q: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self.stats = ServerStats()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._results: "queue.Queue" = queue.Queue()
+        self._workers = [threading.Thread(target=self._run, daemon=True)
+                         for _ in range(n_workers)]
+
+    def start(self) -> "EnsembleServer":
+        for w in self._workers:
+            w.start()
+        return self
+
+    def submit(self, patient: int, windows: Dict,
+               t_window: Optional[float] = None) -> bool:
+        """Non-blocking ingest; returns False if the queue is full
+        (overload shedding rather than unbounded latency)."""
+        t_window = t_window if t_window is not None else time.monotonic()
+        try:
+            self.q.put_nowait((patient, windows, t_window))
+            return True
+        except queue.Full:
+            return False
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                patient, windows, t_window = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            score = self.handler(windows)
+            lat = time.monotonic() - t_window
+            with self._lock:
+                self.stats.served += 1
+                self.stats.latencies.append(lat)
+                if lat > self.slo:
+                    self.stats.slo_violations += 1
+            self._results.put((patient, score, lat))
+            self.q.task_done()
+
+    def results(self, max_items: int = 0) -> List:
+        out = []
+        while not self._results.empty() and (
+                not max_items or len(out) < max_items):
+            out.append(self._results.get_nowait())
+        return out
+
+    def drain(self, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        while not self.q.empty() and time.monotonic() < deadline:
+            time.sleep(0.01)
+
+    def stop(self) -> ServerStats:
+        self.drain()
+        self._stop.set()
+        for w in self._workers:
+            w.join(timeout=2.0)
+        return self.stats

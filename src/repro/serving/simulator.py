@@ -1,0 +1,161 @@
+"""Discrete-event simulation of the HOLMES serving pipeline (§4.1.2).
+
+Replaces the paper's client-node/HTTP/RPC testbed with a deterministic,
+seedable event simulation of the SAME pipeline: per-patient multi-modal
+streams -> stateful aggregators -> observation-window queries -> model
+queue -> device pool running the ensemble -> bagging combine.
+
+Used for (a) Fig. 9 online-vs-offline, (b) Fig. 10 scalability sweeps,
+(c) the measured-mode latency profiler, and (d) validating the network-
+calculus T_q bound against empirical queueing delays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.queues import TimestampedQueue
+
+SAMPLE, WINDOW, DEVICE_FREE, FLUSH = range(4)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_patients: int = 64
+    n_devices: int = 2
+    window_seconds: float = 30.0
+    duration_seconds: float = 120.0
+    ingest_hz: float = 250.0          # per-patient waveform rate
+    chunk_seconds: float = 0.2        # HTTP flush granularity
+    batch_period: float = 0.0         # >0 => offline batch mode (Fig. 9)
+    dispatch_overhead: float = 0.0005
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    patient: int
+    t_window: float                   # when the window closed (query born)
+    t_start: float = 0.0              # first model began executing
+    t_done: float = 0.0              # last model finished
+    n_models: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_window
+
+    @property
+    def queue_delay(self) -> float:
+        return self.t_start - self.t_window
+
+
+@dataclasses.dataclass
+class SimResult:
+    queries: List[QueryRecord]
+    arrivals: np.ndarray              # query birth times
+    ingest_events: int
+    device_busy: float
+    duration: float
+    queue_stats: Dict[str, object]
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray([q.latency for q in self.queries])
+
+    def queue_delays(self) -> np.ndarray:
+        return np.asarray([q.queue_delay for q in self.queries])
+
+    def p(self, pct: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, pct)) if len(lat) else 0.0
+
+    @property
+    def utilization(self) -> float:
+        return self.device_busy / max(self.duration, 1e-9)
+
+
+def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
+    """model_costs: seconds/query for each SELECTED ensemble member."""
+    rng = np.random.default_rng(cfg.seed)
+    costs = list(model_costs)
+    events: List[Tuple[float, int, int, tuple]] = []
+    counter = itertools.count()
+
+    def push(t: float, kind: int, payload: tuple = ()):
+        heapq.heappush(events, (t, next(counter), kind, payload))
+
+    # schedule per-patient window closures (random phase)
+    phases = rng.uniform(0, cfg.window_seconds, cfg.n_patients)
+    for p in range(cfg.n_patients):
+        t = phases[p] + cfg.window_seconds
+        while t <= cfg.duration_seconds:
+            push(t, WINDOW, (p,))
+            t += cfg.window_seconds
+    # batch mode: queries are held and flushed every batch_period
+    if cfg.batch_period > 0:
+        t = cfg.batch_period
+        while t <= cfg.duration_seconds + cfg.batch_period:
+            push(t, FLUSH, ())
+            t += cfg.batch_period
+
+    ingest_events = int(cfg.duration_seconds / cfg.chunk_seconds
+                        * cfg.n_patients)
+
+    model_q = TimestampedQueue("models")
+    held: List[QueryRecord] = []
+    queries: List[QueryRecord] = []
+    free_devices = cfg.n_devices
+    device_busy = 0.0
+
+    def enqueue_query(rec: QueryRecord, now: float):
+        rec.n_models = len(costs)
+        rec._remaining = len(costs)           # type: ignore[attr-defined]
+        rec.t_start = -1.0
+        queries.append(rec)
+        for c in costs:
+            model_q.push(now, (rec, c))
+
+    def try_dispatch(now: float):
+        nonlocal free_devices, device_busy
+        while free_devices > 0 and len(model_q):
+            task = model_q.pop(now)
+            rec, c = task
+            if rec.t_start < 0:
+                rec.t_start = now
+            free_devices -= 1
+            device_busy += c
+            push(now + c + cfg.dispatch_overhead, DEVICE_FREE, (rec,))
+
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == WINDOW:
+            rec = QueryRecord(patient=payload[0], t_window=now)
+            if cfg.batch_period > 0:
+                held.append(rec)
+            else:
+                enqueue_query(rec, now)
+                try_dispatch(now)
+        elif kind == FLUSH:
+            for rec in held:
+                enqueue_query(rec, now)
+            held.clear()
+            try_dispatch(now)
+        elif kind == DEVICE_FREE:
+            rec = payload[0]
+            rec._remaining -= 1               # type: ignore[attr-defined]
+            if rec._remaining == 0:
+                rec.t_done = now
+            free_devices += 1
+            try_dispatch(now)
+
+    done = [q for q in queries if q.t_done > 0]
+    return SimResult(
+        queries=done,
+        arrivals=np.asarray(sorted(q.t_window for q in queries)),
+        ingest_events=ingest_events,
+        device_busy=device_busy,
+        duration=cfg.duration_seconds,
+        queue_stats={"models": model_q.waits()})

@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> npz with path-keyed arrays + JSON metadata.
+
+Flat path keys make checkpoints structure-stable across refactors, and the
+save is atomic (tmp file + rename) so a killed run never leaves a corrupt
+checkpoint behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, metadata: Optional[Dict[str, Any]] = None
+         ) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    meta = dict(metadata or {})
+    meta["n_arrays"] = len(flat)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of `like` (a template pytree)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {np.shape(leaf)}")
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype)
+                          if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(path + ".json") as f:
+        return json.load(f)

@@ -1,0 +1,135 @@
+"""Training loops: LM train step (assigned architectures) and the ECG-zoo
+trainer that populates the paper's model zoo.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.ecg_zoo import EcgModelSpec
+from repro.models.api import get_model
+from repro.models.ecg_resnext import ecg_apply, init_ecg
+from repro.models.layers import softmax_xent
+from repro.models.runtime import RuntimeOptions
+from repro.training.optimizer import AdamW, constant_schedule
+
+
+# ------------------------------------------------------------- LM steps
+def lm_loss(params, batch: Dict, cfg: ArchConfig, rt: RuntimeOptions,
+            model=None):
+    model = model or get_model(cfg)
+    logits, aux = model.forward(params, batch["tokens"], cfg, rt,
+                                prefix_embeds=batch.get("prefix_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:      # VLM/audio prefix positions
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    loss = softmax_xent(logits, labels)
+    if cfg.moe:
+        loss = loss + cfg.moe.router_aux_coef * aux
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, rt: RuntimeOptions, opt: AdamW
+                    ) -> Callable:
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg, rt, model))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve_prefill(cfg: ArchConfig, rt: RuntimeOptions) -> Callable:
+    model = get_model(cfg)
+
+    def serve_prefill(params, batch):
+        logits, cache = model.prefill(
+            params, batch["tokens"], cfg, rt,
+            prefix_embeds=batch.get("prefix_embeds"),
+            max_len=batch["tokens"].shape[1] + 1
+            + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0))
+        return logits
+
+    return serve_prefill
+
+
+def make_serve_step(cfg: ArchConfig, rt: RuntimeOptions) -> Callable:
+    """ONE new token against an existing KV cache (decode shapes)."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token, cfg, rt)
+
+    return serve_step
+
+
+def train_lm(cfg: ArchConfig, rt: RuntimeOptions, batches: Iterator,
+             steps: int, lr: float = 3e-4, seed: int = 0,
+             log_every: int = 10, callback: Optional[Callable] = None):
+    opt = AdamW(lr=constant_schedule(lr))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed), cfg, rt)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, rt, opt))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if callback and (i % log_every == 0 or i == steps - 1):
+            callback(i, losses[-1])
+    return params, losses
+
+
+# ------------------------------------------------------------- ECG zoo
+def ecg_loss(params, x, y, spec: EcgModelSpec):
+    logits = ecg_apply(params, x, spec)
+    return softmax_xent(logits, y)
+
+
+def train_ecg_model(spec: EcgModelSpec, x: np.ndarray, y: np.ndarray,
+                    steps: int = 150, batch: int = 32, lr: float = 1e-3,
+                    seed: int = 0) -> Tuple[Dict, list]:
+    """x: [n, L] single-lead clips; y: [n] binary labels."""
+    params = init_ecg(jax.random.PRNGKey(seed), spec)
+    opt = AdamW(lr=constant_schedule(lr), weight_decay=1e-4)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss_fn(p):
+            logits = ecg_apply(p, xb[..., None], spec)
+            return softmax_xent(logits, yb)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    n = len(x)
+    for i in range(steps):
+        idx = rng.integers(0, n, size=min(batch, n))
+        params, opt_state, loss = step(params, opt_state,
+                                       jnp.asarray(x[idx]),
+                                       jnp.asarray(y[idx]))
+        losses.append(float(loss))
+    return params, losses
+
+
+def ecg_predict_proba(params, x: np.ndarray, spec: EcgModelSpec,
+                      batch: int = 256) -> np.ndarray:
+    """P(stable) for single-lead clips x: [n, L]."""
+    fn = jax.jit(lambda xb: jax.nn.softmax(
+        ecg_apply(params, xb[..., None], spec), axis=-1)[:, 1])
+    out = []
+    for i in range(0, len(x), batch):
+        out.append(np.asarray(fn(jnp.asarray(x[i:i + batch]))))
+    return np.concatenate(out) if out else np.zeros((0,))

@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py forces 512
+placeholder devices (and runs in its own process).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def icu_data():
+    from repro.training.data import make_icu_dataset, split_by_patient
+    data = make_icu_dataset(n_patients=12, clips_per_patient=8, seed=0,
+                            seconds=3)
+    return split_by_patient(data, holdout=4)

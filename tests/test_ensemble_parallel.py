@@ -1,0 +1,39 @@
+"""Ensemble-parallel serving (Eq. 5 as a collective): numerics on the
+host mesh must equal plain bagging."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.ensemble_parallel import ensemble_serve, stack_members
+from repro.launch.mesh import make_host_mesh
+
+
+def test_ensemble_serve_equals_bagging():
+    key = jax.random.PRNGKey(0)
+    d, n_members = 16, 4
+
+    def member_apply(p, batch):
+        h = jnp.tanh(batch["x"] @ p["w1"])
+        return jax.nn.softmax(h @ p["w2"], axis=-1)
+
+    members = []
+    for i in range(n_members):
+        k1, k2, key = jax.random.split(key, 3)
+        members.append({"w1": jax.random.normal(k1, (d, d)) * 0.3,
+                        "w2": jax.random.normal(k2, (d, 2)) * 0.3})
+    batch = {"x": jax.random.normal(key, (8, d))}
+
+    want = jnp.mean(jnp.stack([member_apply(p, batch) for p in members]),
+                    axis=0)
+    mesh = make_host_mesh()
+    step = ensemble_serve(member_apply, mesh, n_members)
+    with mesh:
+        got = jax.jit(step)(stack_members(members), batch)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_stack_members_shape():
+    ms = [{"w": jnp.ones((3,)) * i} for i in range(5)]
+    st = stack_members(ms)
+    assert st["w"].shape == (5, 3)
+    np.testing.assert_allclose(st["w"][:, 0], np.arange(5))

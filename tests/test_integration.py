@@ -1,0 +1,99 @@
+"""End-to-end integration: zoo -> profilers -> composer -> deployed
+pipeline serving live streams, plus dry-run smoke on the host mesh."""
+import numpy as np
+import pytest
+
+from repro.core.composer import ComposerParams, compose
+from repro.core.profiles import SystemConfig
+
+
+@pytest.fixture(scope="module")
+def small_zoo():
+    from benchmarks.zoo_setup import build_zoo
+    return build_zoo(n_patients=12, clips=6, steps=60, seconds=3,
+                     verbose=False)
+
+
+def test_compose_then_serve_end_to_end(small_zoo):
+    from benchmarks.zoo_setup import binding_budget, make_profilers
+    from repro.serving.pipeline import (EnsembleService,
+                                        StreamingPipeline, ZooMember)
+    from repro.training.data import ecg_clip, sample_patient, vitals_clip
+
+    zoo, extras = small_zoo
+    sysconf = SystemConfig(n_devices=2, n_patients=4)
+    f_a, f_l = make_profilers(zoo, sysconf, extras)
+    budget = binding_budget(zoo, f_l)
+    res = compose(len(zoo), f_a, f_l, budget,
+                  ComposerParams(N=4, M=40, K=4, N0=8, seed=0))
+    assert res.feasible
+    assert res.latency <= budget + 1e-9
+    sel = np.flatnonzero(res.b_star)
+    assert len(sel) >= 1
+
+    members = [ZooMember(extras["specs"][i],
+                         extras["params"][zoo.profiles[i].name])
+               for i in sel]
+    svc = EnsembleService(members, vitals_model=extras["vitals_model"],
+                          labs_model=extras["labs_model"])
+    pipe = StreamingPipeline(svc, n_patients=2, window_seconds=3.0)
+    rng = np.random.default_rng(0)
+    scores = {0: [], 1: []}
+    for patient in (0, 1):
+        pp = sample_patient(rng, patient)
+        t = 0.0
+        for _ in range(2):
+            pipe.feed(t, patient, "vitals", vitals_clip(rng, pp, 3))
+            rec = pipe.feed(t + 3.0, patient, "ecg",
+                            ecg_clip(rng, pp, 3))
+            t += 3.0
+            if rec:
+                scores[patient].append(rec.score)
+                assert 0.0 <= rec.score <= 1.0
+                assert rec.latency < 5.0        # sanity, CPU
+    assert scores[0] and scores[1]
+    # stable patient should score higher than critical on average
+    assert np.mean(scores[1]) > np.mean(scores[0]) - 0.25
+
+
+def test_composer_triggers(small_zoo):
+    """§3.2: the composer re-runs when inputs change — more patients
+    (load) must never yield a LOWER-latency-estimate ensemble being
+    infeasible at fewer patients; fewer devices never helps."""
+    from benchmarks.zoo_setup import make_profilers
+    zoo, extras = small_zoo
+    b = np.ones(len(zoo), np.int8)
+    lat = []
+    for n_pat in (4, 64, 256):
+        _, f_l = make_profilers(
+            zoo, SystemConfig(n_devices=2, n_patients=n_pat), extras)
+        lat.append(f_l(b))
+    assert lat[0] <= lat[1] <= lat[2] or lat[2] >= lat[0]
+    lat_dev = []
+    for n_dev in (1, 4):
+        _, f_l = make_profilers(
+            zoo, SystemConfig(n_devices=n_dev, n_patients=32), extras)
+        lat_dev.append(f_l(b))
+    assert lat_dev[1] <= lat_dev[0] + 1e-9
+
+
+def test_lm_serving_prefill_decode_loop():
+    """launch/serve.py path: batched prefill + multi-token decode."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_config
+    from repro.models.api import get_model
+    from repro.models.runtime import RuntimeOptions
+
+    cfg = get_config("zamba2-7b").reduced()
+    rt = RuntimeOptions()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg, rt)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    logits, cache = model.prefill(params, toks, cfg, rt, max_len=24)
+    for _ in range(4):
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, cache = model.decode_step(params, cache, tok, cfg, rt)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(cache["idx"]) == 20

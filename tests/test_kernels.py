@@ -1,0 +1,137 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.conv1d_stripe import conv1d_stripe
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssd_scan import ssd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,D,causal,window", [
+    (2, 64, 64, 4, 2, 32, True, 0),
+    (1, 128, 128, 8, 8, 64, True, 16),
+    (2, 48, 96, 4, 1, 32, True, 0),
+    (1, 64, 64, 2, 2, 32, False, 0),
+    (1, 33, 70, 6, 3, 16, True, 24),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, T, Hq, Hkv, D, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    qpos = jnp.arange(T - S, T)
+    kpos = jnp.arange(T)
+    want = ref.attention(q, k, v, qpos, kpos, causal=causal, window=window)
+    got = flash_attention(q, k, v, qpos, kpos, causal=causal,
+                          window=window, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,D,window,fill", [
+    (2, 128, 8, 2, 64, 0, 128),
+    (2, 128, 8, 2, 64, 0, 100),     # partially-filled cache
+    (1, 96, 4, 4, 32, 32, 96),      # windowed ring
+    (2, 80, 4, 1, 32, 0, 80),       # MQA, unaligned length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, T, Hq, Hkv, D, window, fill, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    kpos = jnp.where(jnp.arange(T) < fill, jnp.arange(T), -1)
+    qpos = jnp.asarray(fill)
+    want = ref.decode_attention(q, k, v, kpos, qpos, window=window)
+    got = decode_attention(q, k, v, kpos, qpos, window=window,
+                           block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (2, 64, 4, 16, 2, 8, 16),
+    (1, 48, 4, 8, 1, 16, 16),
+    (2, 32, 2, 16, 2, 8, 8),
+    (1, 40, 4, 8, 4, 8, 16),        # padded chunk
+])
+def test_ssd(B, S, H, P, G, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    D = jnp.ones((H,))
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+    yw, hw = ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk, h0)
+    yg, hg = ssd(x, dt, A, Bm, Cm, D, chunk, h0, interpret=True)
+    np.testing.assert_allclose(yg, yw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(hg, hw, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_sequential_decode():
+    """Chunked prefill state == running the recurrent step S times."""
+    B, S, H, P, G, N = 1, 32, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    D = jnp.zeros((H,))
+    y_chunk, hT = ref.ssd_chunked(x, dt, A, Bm, Cm, D, 8)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        y, h = ref.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+                                   Cm[:, t], D)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_seq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(hT, h, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 64, 32, 48), (2, 100, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, d, f, dtype):
+    ks = jax.random.split(KEY, 4)
+    xb = jax.random.normal(ks[0], (E, C, d), dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f)) / d ** 0.5).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) / d ** 0.5).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d)) / f ** 0.5).astype(dtype)
+    want = ref.moe_gmm(xb, wg, wu, wd)
+    got = moe_gmm(xb, wg, wu, wd, block_c=32, block_f=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,L,Cin,Cout,K,stride,groups,pad", [
+    (2, 64, 8, 16, 7, 1, 1, "SAME"),
+    (2, 64, 8, 16, 7, 2, 1, "SAME"),
+    (1, 50, 12, 12, 4, 1, 12, "CAUSAL"),
+    (2, 33, 8, 8, 7, 2, 4, "SAME"),
+])
+def test_conv1d_stripe(B, L, Cin, Cout, K, stride, groups, pad):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (B, L, Cin))
+    w = jax.random.normal(ks[1], (K, Cin // groups, Cout))
+    want = ref.conv1d_stripe(x, w, None, stride, groups, pad)
+    got = conv1d_stripe(x, w, None, stride, groups, pad, interpret=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

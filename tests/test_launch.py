@@ -1,0 +1,130 @@
+"""Launch-layer units that run WITHOUT the 512-device platform: the HLO
+collective parser, roofline extrapolation, probe-pair construction,
+sharding rules, and the wall-clock server."""
+import time
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_config
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.launch.roofline import _extrapolate, model_flops, probe_pair
+from repro.launch.sharding import cache_spec, param_spec
+
+
+# ------------------------------------------------------- HLO parsing
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,8]{1,0}") == 64
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(bf16[2,2], f32[3])") == 20
+    assert _shape_bytes("pred[7]") == 7
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %x.1 = bf16[128,256]{1,0} all-gather(%p.0), dimensions={0}
+  ROOT %y = f32[64]{0} all-reduce(%z), to_apply=%add
+  %fusion.all-reduce-ish = bf16[4,4]{1,0} fusion(%a), kind=kLoop
+  %ar2 = (f32[8], f32[8]) all-reduce-start(%q, %r)
+  %cp = bf16[32]{0} collective-permute(%m), source_target_pairs={{0,1}}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 4 + 2 * 8 * 4
+    assert out["collective-permute"] == 32 * 2
+    assert out["all-to-all"] == 0
+
+
+# ------------------------------------------------------- roofline math
+def test_extrapolation_linear():
+    mk = lambda f: {"flops": f, "bytes_accessed": 2 * f,
+                    "collective_total": f / 10,
+                    "collective_bytes": {"all-reduce": f / 10}}
+    out = _extrapolate(mk(10.0), 2.0, mk(14.0), 4.0, 32.0)
+    # slope 2/unit, intercept 10-2*2=6, full = 6+64 = 70
+    assert out["flops"] == pytest.approx(70.0)
+    assert out["bytes_accessed"] == pytest.approx(140.0)
+    assert out["collective_bytes"]["all-reduce"] == pytest.approx(7.0)
+
+
+def test_probe_pairs_shapes():
+    for arch in ("qwen3-4b", "deepseek-v2-lite-16b", "zamba2-7b",
+                 "seamless-m4t-medium", "mamba2-2.7b"):
+        cfg = get_config(arch)
+        a, ua, b, ub, uf = probe_pair(cfg)
+        assert ub > ua > 0
+        assert uf >= ub
+        assert a.d_model == cfg.d_model         # only depth reduced
+        assert a.vocab_size == cfg.vocab_size
+    ds = get_config("deepseek-v2-lite-16b")
+    a, *_ = probe_pair(ds)
+    assert a.moe.first_dense_layers == ds.moe.first_dense_layers
+
+
+def test_model_flops_conventions():
+    from repro.configs.shapes import get_shape
+    cfg = get_config("qwen3-4b")
+    tr = model_flops(cfg, get_shape("train_4k"))
+    pf = model_flops(cfg, get_shape("prefill_32k"))
+    dc = model_flops(cfg, get_shape("decode_32k"))
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert dc == pytest.approx(2 * n * 128)
+
+
+# ------------------------------------------------------- sharding rules
+def test_param_spec_rules():
+    cfg = get_config("qwen3-4b")
+    assert param_spec(("segments", "0", "attn", "wq", "w"),
+                      (36, 2560, 4096), cfg, 16) == P(None, None, "model")
+    assert param_spec(("segments", "0", "attn", "wo", "w"),
+                      (36, 4096, 2560), cfg, 16) == P(None, "model", None)
+    assert param_spec(("embed", "table"), (151936, 2560), cfg, 16) \
+        == P("model", None)
+    # smollm's flattened q dim (15*64=960) divides 16, so it shards
+    # (GSPMD reshards at the head reshape; dp_only is the fast layout)
+    assert param_spec(("segments", "0", "attn", "wq", "w"),
+                      (32, 960, 15 * 64), get_config("smollm-360m"), 16) \
+        == P(None, None, "model")
+    # genuinely non-divisible output dim -> replicate
+    assert param_spec(("segments", "0", "attn", "wq", "w"),
+                      (2, 64, 30), get_config("smollm-360m"), 16) == P()
+    assert param_spec(("segments", "0", "mlp", "router"),
+                      (2048, 64), get_config("deepseek-v2-lite-16b"),
+                      16) == P()
+
+
+def test_cache_spec_rules():
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # kv cache: batch then model when divisible by 1 (host mesh)
+    spec = cache_spec(("segments", "0", "k"), (27, 8, 128, 16, 64),
+                      mesh, batch=8)
+    assert spec == P(None, "data", None, "model", None)
+    spec = cache_spec(("pos",), (128,), mesh, batch=8)
+    assert spec == P()
+
+
+# ------------------------------------------------------- server
+def test_wallclock_server():
+    from repro.serving.server import EnsembleServer
+
+    def handler(windows):
+        time.sleep(0.002)
+        return float(np.mean(windows["x"]))
+
+    srv = EnsembleServer(handler, n_workers=2, slo_seconds=0.5).start()
+    for i in range(20):
+        assert srv.submit(i % 4, {"x": np.full((4,), i)})
+    srv.drain()
+    stats = srv.stop()
+    assert stats.served == 20
+    assert stats.slo_violations == 0
+    assert 0 < stats.p(95) < 0.5
+    res = srv.results()
+    assert len(res) == 20
+    assert all(0 <= r[2] < 0.5 for r in res)

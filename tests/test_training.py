@@ -1,0 +1,116 @@
+"""Training substrate: optimizer, data, checkpointing, loss curves."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.ecg_zoo import zoo_specs
+from repro.configs.registry import get_config
+from repro.models.layers import softmax_xent
+from repro.models.runtime import RuntimeOptions
+from repro.training import checkpoint
+from repro.training.data import (lm_batches, make_icu_dataset,
+                                 split_by_patient)
+from repro.training.optimizer import (AdamW, constant_schedule,
+                                      cosine_schedule, global_norm)
+from repro.training.train_loop import (ecg_predict_proba, train_ecg_model,
+                                       train_lm)
+
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr=constant_schedule(0.1), weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_grad_clip():
+    opt = AdamW(lr=constant_schedule(0.1), grad_clip=1.0)
+    g = {"a": jnp.full((4,), 100.0)}
+    assert float(global_norm(g)) == pytest.approx(200.0)
+    params = {"a": jnp.zeros((4,))}
+    state = opt.init(params)
+    p2, _ = opt.update(g, state, params)
+    assert bool(jnp.isfinite(p2["a"]).all())
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_softmax_xent_masking():
+    logits = jnp.asarray([[[2.0, 0.0], [0.0, 2.0]]])
+    labels = jnp.asarray([[0, -1]])           # second token masked
+    l1 = softmax_xent(logits, labels)
+    l2 = softmax_xent(logits[:, :1], labels[:, :1])
+    assert float(l1) == pytest.approx(float(l2))
+
+
+def test_lm_loss_decreases():
+    cfg = get_config("smollm-360m").reduced()
+    _, losses = train_lm(cfg, RuntimeOptions(),
+                         lm_batches(cfg.vocab_size, 8, 64, seed=0),
+                         steps=25)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_icu_dataset_structure():
+    data = make_icu_dataset(n_patients=4, clips_per_patient=3, seed=0,
+                            seconds=2)
+    assert data["ecg"].shape == (12, 3, 500)
+    assert data["vitals"].shape == (12, 7, 2)
+    assert data["labs"].shape == (12, 8)
+    tr, va = split_by_patient(data, holdout=1)
+    assert set(np.unique(va["patient"])) == {3}
+    assert not set(np.unique(tr["patient"])) & {3}
+
+
+def test_ecg_model_learns(icu_data):
+    tr, va = icu_data
+    spec = zoo_specs(reduced=True, input_len=750)[0]
+    params, losses = train_ecg_model(spec, tr["ecg"][:, 0, :],
+                                     tr["label"], steps=60, seed=0)
+    assert losses[-1] < losses[0]
+    proba = ecg_predict_proba(params, va["ecg"][:, 0, :], spec)
+    assert proba.shape == (len(va["label"]),)
+    assert np.all((proba >= 0) & (proba <= 1))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": [jnp.ones((4,)), jnp.zeros((2, 2))]}
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, tree, {"step": 7})
+    out = checkpoint.restore(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(a, b)
+    assert checkpoint.load_metadata(path)["step"] == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.zeros((3, 3))})
+
+
+def test_random_forest_and_logreg():
+    from repro.core.forest import RandomForest
+    from repro.models.tabular import LogisticRegression
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (300, 8))
+    y_reg = X[:, 0] * 2 + X[:, 1] + 0.1 * rng.normal(size=300)
+    rf = RandomForest(n_trees=20, max_depth=8).fit(X[:200], y_reg[:200])
+    assert rf.score_r2(X[200:], y_reg[200:]) > 0.5
+    y_cls = (X @ rng.normal(0, 1, 8) > 0).astype(float)
+    lr = LogisticRegression(steps=300).fit(X[:200], y_cls[:200])
+    acc = np.mean((lr.predict_proba(X[200:]) > 0.5) == y_cls[200:])
+    assert acc > 0.8
