@@ -69,6 +69,13 @@ def main(argv=None) -> None:
     bench("measured_member_costs",
           serving_bench.bench_measured_costs,
           lambda t: f"n_members={len(t)}")
+    # quick mode: fewer reps, and don't clobber the tracked
+    # BENCH_serving.json trajectory with the noisy numbers
+    bench("fused_serving",
+          lambda: serving_bench.bench_fused_serving(
+              reps=3 if args.quick else 10,
+              write_json=not args.quick),
+          lambda t: f"speedup={t['speedup_fused_microbatch']:.2f}x")
     bench("roofline_table",
           bench_roofline,
           lambda t: f"n_records={len(t)}")

@@ -1,13 +1,20 @@
 """Fig. 9 / Fig. 10 / Fig. 13: serving-system benchmarks on the DES
 (deterministic stand-in for the paper's HTTP/RPC testbed) plus real
-wall-clock jitted-inference costs measured on this machine.
+wall-clock jitted-inference costs measured on this machine, and the
+fused-serving before/after microbench (``bench_fused_serving``) whose
+trajectory is tracked in ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List
 
 import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serving.json")
 
 from repro.serving.latency import LatencyProfiler, queueing_bound
 from repro.serving.simulator import SimConfig, simulate
@@ -94,6 +101,81 @@ def bench_fig13(windows=(5, 10, 30, 60), model_cost_per_s: float = 7e-4,
             print(f"Fig 13 window {w:3d}s: Ts {v['ts_s'] * 1000:6.1f}ms  "
                   f"Tq_bound {v['tq_bound_s'] * 1000:6.1f}ms  "
                   f"e2e_p95 {v['e2e_p95_s'] * 1000:6.1f}ms")
+    return out
+
+
+def bench_fused_serving(n_patients: int = 16, reps: int = 10,
+                        input_len: int = 750, verbose=True,
+                        write_json: bool = True) -> Dict:
+    """Before/after microbench of the fused serving hot path on the
+    reduced 12-member zoo x ``n_patients`` streaming patients:
+
+    * ``per_member``       — the old loop: one jitted dispatch + sync
+                             per member per patient (12/query);
+    * ``fused``            — architecture-bucketed stacked execution,
+                             one dispatch per bucket (4/query);
+    * ``fused_microbatch`` — fused + cross-patient micro-batching: one
+                             flush serves all ``n_patients`` windows
+                             (4 dispatches per FLUSH, 4/P per query).
+
+    Writes the result to BENCH_serving.json so the perf trajectory is
+    tracked across PRs.
+    """
+    import jax
+    from repro.configs.ecg_zoo import zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.pipeline import EnsembleService, ZooMember
+
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    windows = [{"ecg": rng.standard_normal((3, input_len))
+                .astype(np.float32)} for _ in range(n_patients)]
+
+    modes = (("per_member", False, False), ("fused", True, False),
+             ("fused_microbatch", True, True))
+    out: Dict = {"n_patients": n_patients, "n_members": len(members),
+                 "reps": reps, "input_len": input_len, "modes": {}}
+    for name, fused, microbatch in modes:
+        svc = EnsembleService(members, fused=fused)
+        if fused:
+            out["n_buckets"] = svc.n_buckets
+        if microbatch:
+            svc.predict_batch(windows)                 # warmup/compile
+        else:
+            svc.predict(windows[0])
+        d0, n_q = svc.dispatch_count, 0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            if microbatch:
+                svc.predict_batch(windows)
+            else:
+                for w in windows:
+                    svc.predict(w)
+            n_q += n_patients
+        dt = time.perf_counter() - t0
+        out["modes"][name] = {
+            "per_query_ms": dt / n_q * 1e3,
+            "sustained_qps": n_q / dt,
+            "dispatches_per_query": (svc.dispatch_count - d0) / n_q,
+        }
+    base = out["modes"]["per_member"]
+    best = out["modes"]["fused_microbatch"]
+    out["speedup_fused_microbatch"] = (base["per_query_ms"]
+                                       / best["per_query_ms"])
+    if verbose:
+        print(f"\nfused serving bench (reduced zoo x {n_patients} "
+              f"patients, CPU):")
+        for name, m in out["modes"].items():
+            print(f"  {name:17s}: {m['per_query_ms']:7.2f} ms/query  "
+                  f"{m['sustained_qps']:7.1f} q/s  "
+                  f"{m['dispatches_per_query']:5.2f} dispatches/query")
+        print(f"  speedup (fused+microbatch vs per-member): "
+              f"{out['speedup_fused_microbatch']:.2f}x")
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(out, f, indent=2)
     return out
 
 

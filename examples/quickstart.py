@@ -48,6 +48,8 @@ def main():
     svc = EnsembleService(members, vitals_model=extras["vitals_model"],
                           labs_model=extras["labs_model"])
     svc.warmup()
+    print(f"fused dispatch plan: {len(members)} members -> "
+          f"{svc.n_buckets} stacked buckets per query")
     pipe = StreamingPipeline(svc, n_patients=2, window_seconds=3.0)
     rng = np.random.default_rng(0)
     for patient in range(2):

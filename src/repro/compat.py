@@ -1,0 +1,14 @@
+"""Version-compat shims over the jax API surface.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to a top-level
+export around jax 0.5; resolve it once here so every call site stays on
+one import path.
+"""
+from __future__ import annotations
+
+try:                                     # jax >= 0.5
+    from jax import shard_map
+except ImportError:                      # older jax
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

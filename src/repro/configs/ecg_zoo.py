@@ -8,11 +8,21 @@ join the final accuracy ensemble.
 ``zoo_specs(reduced=True)`` is the CPU-friendly zoo used by tests and the
 default benchmarks (3 leads × {8,16} filters × {2,4} blocks = 12 models,
 shorter clips).
+
+Architecture buckets (serving): members whose parameter pytrees are
+structurally identical — same ``(width, blocks, input_len, cardinality,
+kernel_size)``; the lead only selects which input slice a member consumes
+— can be STACKED along a leading member axis and executed as ONE jitted
+vmap-over-params call.  ``bucket_key`` / ``bucket_zoo`` define that
+grouping: the reduced zoo's 12 members collapse to 4 buckets (2 widths ×
+2 block counts, the 3 leads folding into each bucket) and the full zoo's
+60 to 20.  ``serving.pipeline.EnsembleService`` builds its fused
+dispatch plan from these buckets.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +56,29 @@ def zoo_specs(reduced: bool = True, input_len: int = None,
                     name=f"lead{lead + 1}_w{w}_b{b}",
                     lead=lead, width=w, blocks=b, input_len=input_len,
                     cardinality=min(8, w)))
+    return out
+
+
+BucketKey = Tuple[int, int, int, int, int]
+
+
+def bucket_key(spec: EcgModelSpec) -> BucketKey:
+    """Shape signature under which members share one stacked program.
+    Everything but ``lead``/``name`` — two specs with equal keys have
+    structurally identical parameter pytrees."""
+    return (spec.width, spec.blocks, spec.input_len, spec.cardinality,
+            spec.kernel_size)
+
+
+def bucket_zoo(specs: Sequence[EcgModelSpec]
+               ) -> Dict[BucketKey, List[int]]:
+    """Group member indices by ``bucket_key`` (insertion-ordered, so
+    bucket order is deterministic given spec order).  The serving path
+    issues one stacked dispatch per bucket instead of one per member:
+    12 -> 4 on the reduced zoo, 60 -> 20 on the full zoo."""
+    out: Dict[BucketKey, List[int]] = {}
+    for i, s in enumerate(specs):
+        out.setdefault(bucket_key(s), []).append(i)
     return out
 
 

@@ -7,6 +7,12 @@ tap held VMEM-stationary — MXU-shaped without materializing patches.
 
 Grid: (batch, groups) — each step keeps the full (padded) length in VMEM,
 which fits for waveform workloads (7500 x 128 floats = 3.8 MB).
+
+``conv1d_stripe_stacked`` is the ensemble-serving variant: a leading
+MEMBER axis on both activations and weights (grid ``(member, batch,
+groups)``) so one kernel launch covers a whole architecture bucket of
+stacked zoo members — each grid step keeps its member's weight tap
+VMEM-stationary while sweeping the micro-batch.
 """
 from __future__ import annotations
 
@@ -30,6 +36,27 @@ def _kernel(x_ref, w_ref, y_ref, *, K: int, stride: int, L_out: int):
     y_ref[0] = acc.astype(y_ref.dtype)
 
 
+def _kernel_stacked(x_ref, w_ref, y_ref, *, K: int, stride: int,
+                    L_out: int):
+    x = x_ref[0, 0]                               # [Lp, cin_g]
+    acc = jnp.zeros((L_out, y_ref.shape[-1]), jnp.float32)
+    for k in range(K):
+        xk = jax.lax.dynamic_slice_in_dim(x, k, (L_out - 1) * stride + 1, 0)
+        xk = xk[::stride]                         # [L_out, cin_g]
+        acc += jax.lax.dot_general(
+            xk, w_ref[0, k], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = acc.astype(y_ref.dtype)
+
+
+def _same_padding(L: int, K: int, stride: int):
+    """(lo, hi, L_out) for lax-convention SAME padding."""
+    L_out = -(-L // stride)                       # ceil, as in SAME
+    pad_total = max((L_out - 1) * stride + K - L, 0)
+    lo = pad_total // 2
+    return lo, pad_total - lo, L_out
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "groups", "padding",
                                              "interpret"))
 def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
@@ -40,14 +67,12 @@ def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     B, L, Cin = x.shape
     K, cin_g, Cout = w.shape
     cout_g = Cout // groups
-    L_out = -(-L // stride)                       # ceil, as in SAME
 
     if padding == "CAUSAL":
+        L_out = -(-L // stride)
         lo, hi = K - 1, 0
     else:                                         # SAME (lax convention)
-        pad_total = max((L_out - 1) * stride + K - L, 0)
-        lo = pad_total // 2
-        hi = pad_total - lo
+        lo, hi, L_out = _same_padding(L, K, stride)
     extra = (L_out - 1) * stride + K - (L + lo + hi)
     xp = jnp.pad(x, ((0, 0), (lo, hi + max(extra, 0)), (0, 0)))
     Lp = xp.shape[1]
@@ -66,4 +91,53 @@ def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     )(xp, w)
     if b is not None:
         y = y + b
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "groups", "padding",
+                                             "interpret"))
+def conv1d_stripe_stacked(x: jax.Array, w: jax.Array,
+                          b: Optional[jax.Array] = None,
+                          stride: int = 1, groups: int = 1,
+                          padding: str = "SAME", *,
+                          interpret: bool = False) -> jax.Array:
+    """Member-stacked stripe conv for bucketed ensemble serving.
+
+    x: [M, B, L, Cin]; w: [M, K, Cin//groups, Cout]; b: [M, Cout].
+    One launch computes all M stacked members on the shared micro-batch:
+    grid (member, batch, groups), each member's weight tap staying
+    VMEM-stationary across its batch/group steps.  Matches
+    ``jax.vmap(conv1d_stripe)`` / a vmapped ``ref.conv1d_stripe``.
+    """
+    M, B, L, Cin = x.shape
+    Mw, K, cin_g, Cout = w.shape
+    assert Mw == M, (Mw, M)
+    cout_g = Cout // groups
+
+    if padding == "CAUSAL":
+        L_out = -(-L // stride)
+        lo, hi = K - 1, 0
+    else:
+        lo, hi, L_out = _same_padding(L, K, stride)
+    extra = (L_out - 1) * stride + K - (L + lo + hi)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (lo, hi + max(extra, 0)), (0, 0)))
+    Lp = xp.shape[2]
+
+    grid = (M, B, groups)
+    y = pl.pallas_call(
+        functools.partial(_kernel_stacked, K=K, stride=stride, L_out=L_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Lp, cin_g),
+                         lambda m, bi, g: (m, bi, 0, g)),
+            pl.BlockSpec((1, K, cin_g, cout_g),
+                         lambda m, bi, g: (m, 0, 0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L_out, cout_g),
+                               lambda m, bi, g: (m, bi, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((M, B, L_out, Cout), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    if b is not None:
+        y = y + b[:, None, None, :]
     return y

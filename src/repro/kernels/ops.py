@@ -74,7 +74,21 @@ def moe_gmm(xbuf, w_gate, w_up, w_down, *, impl: str = "xla"):
 
 def conv1d(x, w, b=None, stride: int = 1, groups: int = 1,
            padding: str = "SAME", *, impl: str = "xla"):
+    """x: [B, L, Cin] (per-member) or [M, B, L, Cin] (member-stacked
+    ensemble bucket; w gains the same leading M axis, b becomes [M, Cout]).
+    The stacked form keeps bucketed serving inside the custom kernel
+    (grid (member, batch, groups)) instead of vmap-ping the 3-D op."""
     _check(impl)
+    if x.ndim == 4:                               # member-stacked bucket
+        if impl == "xla":
+            y = jax.vmap(
+                lambda xm, wm: ref.conv1d_stripe(xm, wm, None, stride,
+                                                 groups, padding))(x, w)
+            return y if b is None else y + b[:, None, None, :]
+        from repro.kernels import conv1d_stripe
+        return conv1d_stripe.conv1d_stripe_stacked(
+            x, w, b, stride, groups, padding,
+            interpret=(impl == "pallas_interpret"))
     if impl == "xla":
         return ref.conv1d_stripe(x, w, b, stride, groups, padding)
     from repro.kernels import conv1d_stripe

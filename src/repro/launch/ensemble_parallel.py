@@ -18,8 +18,9 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def stack_members(member_params: list):
@@ -88,10 +89,13 @@ def dryrun_ensemble(n_members: int = 4, multi_pod: bool = True,
     with mesh:
         compiled = jax.jit(step).lower(stacked, batch).compile()
     coll = collective_bytes(compiled.as_text())
+    ca = compiled.cost_analysis()            # list-of-dicts on older jax
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     rec = {"mesh": "2x16x16" if multi_pod else "16x16",
            "n_members": n_members,
            "collective_bytes": coll,
-           "flops": float(compiled.cost_analysis().get("flops", 0))}
+           "flops": float(ca.get("flops", 0))}
     if verbose:
         print(f"[ensemble-parallel] {rec['mesh']} x {n_members} members: "
               f"OK, collectives {coll}")

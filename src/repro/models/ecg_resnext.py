@@ -96,6 +96,41 @@ def ecg_apply(params: Dict, x: jax.Array, spec: EcgModelSpec,
     return pooled @ params["head"]["w"] + params["head"]["b"]
 
 
+def ecg_apply_stacked(params: Dict, x: jax.Array, spec: EcgModelSpec,
+                      impl: str = "xla") -> jax.Array:
+    """Fused forward pass over a whole architecture bucket of stacked
+    members (see configs.ecg_zoo.bucket_zoo): ``params`` is the
+    ``stack_members`` pytree (leading member axis M), ``x`` is
+    ``[M, B, L, 1]`` — member-specific lead slices over a shared
+    micro-batch of B windows.  Returns logits ``[M, B, 2]``.
+
+    One jitted call replaces M per-member dispatches; the convs run
+    through the member-axis ``conv1d_stripe_stacked`` kernel when
+    ``impl`` selects Pallas, so the stacked path never falls back to
+    per-member XLA loops.  Numerics match ``ecg_apply`` per member to
+    float tolerance.
+    """
+    gn = jax.vmap(_group_norm)
+    h = ops.conv1d(x, params["stem"]["w"], params["stem"]["b"], stride=2,
+                   impl=impl)
+    h = jax.nn.relu(gn(params["stem_gn"], h))
+    card = spec.cardinality
+    for i, blk in enumerate(params["blocks"]):
+        stride = 2 if i % 2 == 0 else 1
+        r = ops.conv1d(h, blk["reduce"]["w"], blk["reduce"]["b"], impl=impl)
+        r = jax.nn.relu(gn(blk["gn1"], r))
+        r = ops.conv1d(r, blk["stripe"]["w"], blk["stripe"]["b"],
+                       stride=stride, groups=card, impl=impl)
+        r = jax.nn.relu(gn(blk["gn2"], r))
+        r = ops.conv1d(r, blk["expand"]["w"], blk["expand"]["b"], impl=impl)
+        r = gn(blk["gn3"], r)
+        shortcut = h[:, :, ::stride] if stride > 1 else h
+        h = jax.nn.relu(shortcut[:, :, :r.shape[2]] + r)
+    pooled = jnp.mean(h, axis=2)                       # [M, B, W]
+    return (jnp.einsum("mbw,mwc->mbc", pooled, params["head"]["w"])
+            + params["head"]["b"][:, None, :])
+
+
 def ecg_macs(spec: EcgModelSpec) -> float:
     """Analytic multiply-accumulate count (the MACS field of the paper's
     Table-3 model profile)."""

@@ -1,11 +1,15 @@
 """Timestamped FIFO queues (the per-modality ensemble queues of Fig. 4)
-with waiting-time statistics for the latency profiler.
+with waiting-time statistics for the latency profiler, plus the
+cross-patient ``MicroBatcher`` that coalesces ready windows into fused
+ensemble flushes (serving.pipeline.EnsembleService.predict_batch).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Deque, List, Optional, Tuple
+import threading
+import time
+from typing import Any, Callable, Deque, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -47,3 +51,78 @@ class TimestampedQueue:
 
     def waits(self) -> QueueStats:
         return self.stats
+
+
+@dataclasses.dataclass
+class MicroBatchStats:
+    n_items: int = 0
+    n_flushes: int = 0
+    max_batch_seen: int = 0
+    total_hold: float = 0.0       # sum of per-item time spent coalescing
+
+    @property
+    def mean_batch(self) -> float:
+        return self.n_items / self.n_flushes if self.n_flushes else 0.0
+
+    @property
+    def mean_hold(self) -> float:
+        return self.total_hold / self.n_items if self.n_items else 0.0
+
+
+class MicroBatcher:
+    """Coalesces ready per-patient windows into one fused ensemble flush.
+
+    The two knobs trade tail latency for dispatch amortisation:
+
+    * ``max_batch``   — flush as soon as this many items are pending
+                        (bounds per-flush device work and memory);
+    * ``max_wait_ms`` — flush once the OLDEST pending item has waited
+                        this long (bounds the latency a lone patient's
+                        query pays for batching).
+
+    Thread-safe: server workers push/pop concurrently.  ``pop_batch``
+    returns up to ``max_batch`` items (empty list when nothing pending);
+    ``ready`` says whether a flush is due.  ``clock`` is injectable so
+    the DES/unit tests can drive virtual time.
+    """
+
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self.clock = clock
+        self.stats = MicroBatchStats()
+        self._lock = threading.Lock()
+        self._q: Deque[Tuple[float, Any]] = collections.deque()
+
+    def push(self, item: Any, t: Optional[float] = None) -> None:
+        t = self.clock() if t is None else t
+        with self._lock:
+            self._q.append((t, item))
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        now = self.clock() if now is None else now
+        with self._lock:
+            if not self._q:
+                return False
+            return (len(self._q) >= self.max_batch
+                    or now - self._q[0][0] >= self.max_wait)
+
+    def pop_batch(self, now: Optional[float] = None) -> List[Any]:
+        """Pops up to ``max_batch`` items (FIFO) and records stats."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            n = min(len(self._q), self.max_batch)
+            if not n:
+                return []
+            taken = [self._q.popleft() for _ in range(n)]
+            self.stats.n_items += n
+            self.stats.n_flushes += 1
+            self.stats.max_batch_seen = max(self.stats.max_batch_seen, n)
+            self.stats.total_hold += sum(max(0.0, now - t)
+                                         for t, _ in taken)
+            return [item for _, item in taken]

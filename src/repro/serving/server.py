@@ -2,6 +2,13 @@
 threaded request loop — bounded ingest queue, N device-worker threads
 draining per-model tasks, SLO accounting.
 
+Workers are batch-aware: given a ``batch_handler`` (e.g.
+``EnsembleService.predict_batch``) they coalesce queries from many
+patients through a shared ``MicroBatcher`` (bounded by ``max_batch`` /
+``max_wait_ms``) and retire each flush with ONE fused ensemble call.
+With only a scalar ``handler`` they process queries one at a time as
+before.
+
 The DES simulator (simulator.py) is the deterministic twin used by the
 latency profiler and benchmarks; this server is the "really runs" path
 the examples exercise (real jitted inference, real clocks).
@@ -12,9 +19,11 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.serving.queues import MicroBatcher
 
 
 @dataclasses.dataclass
@@ -32,16 +41,25 @@ class EnsembleServer:
     """Serves ensemble queries with a pool of worker threads (the
     stateless-actor pool; one thread ~ one device in the CPU demo).
 
-    handler(query) -> score runs the jitted ensemble; queries are
+    handler(query) -> score runs the jitted ensemble per query;
+    batch_handler(queries) -> scores runs one fused flush for a
+    micro-batch (takes precedence when given).  Queries are
     (patient_id, windows dict) tuples submitted by the ingest side.
     """
 
-    def __init__(self, handler: Callable[[Dict], float],
+    def __init__(self, handler: Optional[Callable[[Dict], float]] = None,
                  n_workers: int = 2, slo_seconds: float = 1.0,
-                 max_queue: int = 1024):
+                 max_queue: int = 1024,
+                 batch_handler: Optional[
+                     Callable[[Sequence[Dict]], List[float]]] = None,
+                 max_batch: int = 8, max_wait_ms: float = 2.0):
+        assert handler is not None or batch_handler is not None
         self.handler = handler
+        self.batch_handler = batch_handler
         self.slo = slo_seconds
         self.q: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self.batcher = MicroBatcher(max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms)
         self.stats = ServerStats()
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -65,21 +83,65 @@ class EnsembleServer:
         except queue.Full:
             return False
 
-    def _run(self) -> None:
-        while not self._stop.is_set():
-            try:
-                patient, windows, t_window = self.q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            score = self.handler(windows)
-            lat = time.monotonic() - t_window
-            with self._lock:
+    # ------------------------------------------------------------ workers
+    def _retire(self, tasks: Sequence, scores: Sequence[float]) -> None:
+        now = time.monotonic()
+        with self._lock:
+            for (patient, _w, t_window), score in zip(tasks, scores):
+                lat = now - t_window
                 self.stats.served += 1
                 self.stats.latencies.append(lat)
                 if lat > self.slo:
                     self.stats.slo_violations += 1
-            self._results.put((patient, score, lat))
+                self._results.put((patient, score, lat))
+        for _ in tasks:
             self.q.task_done()
+
+    def _safe_batch_scores(self, windows: List[Dict]) -> List[float]:
+        """A failing flush must not kill the worker or drop its healthy
+        co-batched queries: retry singly, scoring only the bad ones NaN."""
+        try:
+            return list(self.batch_handler(windows))
+        except Exception:
+            out = []
+            for w in windows:
+                try:
+                    out.extend(self.batch_handler([w]))
+                except Exception:
+                    out.append(float("nan"))
+            return out
+
+    def _run_batched(self) -> None:
+        # short poll only while a batch is coalescing (to honor
+        # max_wait); block at the long timeout when idle
+        coalesce_poll = min(0.05, self.batcher.max_wait / 2 or 0.05)
+        while not self._stop.is_set():
+            timeout = 0.05 if not len(self.batcher) else coalesce_poll
+            try:
+                self.batcher.push(self.q.get(timeout=timeout))
+            except queue.Empty:
+                pass
+            if not self.batcher.ready():
+                continue
+            tasks = self.batcher.pop_batch()
+            if not tasks:
+                continue
+            scores = self._safe_batch_scores([w for _, w, _ in tasks])
+            self._retire(tasks, scores)
+
+    def _run(self) -> None:
+        if self.batch_handler is not None:
+            return self._run_batched()
+        while not self._stop.is_set():
+            try:
+                task = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            try:
+                score = self.handler(task[1])
+            except Exception:
+                score = float("nan")
+            self._retire([task], [score])
 
     def results(self, max_items: int = 0) -> List:
         out = []
@@ -89,9 +151,18 @@ class EnsembleServer:
         return out
 
     def drain(self, timeout: float = 30.0) -> None:
+        """Block until every submitted query has been FULLY processed
+        (queue.join semantics, with a timeout).  Checking ``q.empty()``
+        is not enough: a worker may have popped the last task and still
+        be mid-handler (or the task may be coalescing in the batcher),
+        which used to undercount ``stop()`` stats."""
         deadline = time.monotonic() + timeout
-        while not self.q.empty() and time.monotonic() < deadline:
-            time.sleep(0.01)
+        with self.q.all_tasks_done:
+            while self.q.unfinished_tasks:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self.q.all_tasks_done.wait(min(0.05, remaining))
 
     def stop(self) -> ServerStats:
         self.drain()

@@ -1,0 +1,95 @@
+"""Minimal fallback for ``hypothesis`` so the property tests still run
+(as seeded random sampling) on machines without the package installed.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_shim import given, settings, st
+
+Only the strategy surface the test-suite uses is implemented:
+``integers, floats, booleans, sampled_from, lists``.  ``given`` draws
+``max_examples`` (default 20) pseudo-random examples from a fixed seed so
+runs are deterministic; ``settings`` records ``max_examples`` and ignores
+everything else (``deadline`` etc.).
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0x480  # fixed; determinism matters, the value doesn't
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+st = _St()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    # NOTE: the wrapper must expose a ZERO-ARG signature (no
+    # functools.wraps) or pytest treats the drawn-parameter names as
+    # missing fixtures.
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                fn(*drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # settings() may be applied above or below @given
+        wrapper._shim_max_examples = getattr(
+            fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco

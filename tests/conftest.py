@@ -1,6 +1,10 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
 must see the single real CPU device; only launch/dryrun.py forces 512
 placeholder devices (and runs in its own process).
+
+Heavy integration tests carry ``@pytest.mark.slow`` (registered below) so
+``pytest -m "not slow"`` gives a fast signal; the shared zoo fixtures are
+session-scoped so the default run builds/trains each zoo exactly once.
 """
 import os
 import sys
@@ -9,6 +13,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy integration test (deselect with -m 'not slow')")
 
 
 @pytest.fixture(scope="session")
@@ -22,3 +32,27 @@ def icu_data():
     data = make_icu_dataset(n_patients=12, clips_per_patient=8, seed=0,
                             seconds=3)
     return split_by_patient(data, holdout=4)
+
+
+@pytest.fixture(scope="session")
+def small_zoo():
+    """Trained reduced zoo + extras (cached on disk by zoo_setup);
+    shared session-wide by integration/serving tests."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.zoo_setup import build_zoo
+    return build_zoo(n_patients=12, clips=6, steps=60, seconds=3,
+                     verbose=False)
+
+
+@pytest.fixture(scope="session")
+def zoo_members():
+    """Randomly-initialised reduced-zoo members (short clips) — the
+    shared substrate for fused-serving/equivalence tests, where member
+    WEIGHTS don't matter but shapes and bucketing do."""
+    import jax
+    from repro.configs.ecg_zoo import zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.pipeline import ZooMember
+    specs = zoo_specs(reduced=True, input_len=250)
+    return [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+            for i, s in enumerate(specs)]

@@ -1,7 +1,10 @@
 """Ensemble composer (Algorithm 1/2) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.baselines import (accuracy_first, latency_first, npo,
                                   random_baseline)

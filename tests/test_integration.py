@@ -7,13 +7,11 @@ from repro.core.composer import ComposerParams, compose
 from repro.core.profiles import SystemConfig
 
 
-@pytest.fixture(scope="module")
-def small_zoo():
-    from benchmarks.zoo_setup import build_zoo
-    return build_zoo(n_patients=12, clips=6, steps=60, seconds=3,
-                     verbose=False)
+# small_zoo is session-scoped in conftest.py (shared with the serving
+# tests) so the zoo is built/trained at most once per run.
 
 
+@pytest.mark.slow
 def test_compose_then_serve_end_to_end(small_zoo):
     from benchmarks.zoo_setup import binding_budget, make_profilers
     from repro.serving.pipeline import (EnsembleService,
@@ -36,6 +34,7 @@ def test_compose_then_serve_end_to_end(small_zoo):
                for i in sel]
     svc = EnsembleService(members, vitals_model=extras["vitals_model"],
                           labs_model=extras["labs_model"])
+    svc.warmup()            # compile outside the latency-asserted loop
     pipe = StreamingPipeline(svc, n_patients=2, window_seconds=3.0)
     rng = np.random.default_rng(0)
     scores = {0: [], 1: []}
@@ -77,6 +76,7 @@ def test_composer_triggers(small_zoo):
     assert lat_dev[1] <= lat_dev[0] + 1e-9
 
 
+@pytest.mark.slow
 def test_lm_serving_prefill_decode_loop():
     """launch/serve.py path: batched prefill + multi-token decode."""
     import jax

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.conv1d_stripe import conv1d_stripe
+from repro.kernels.conv1d_stripe import (conv1d_stripe,
+                                         conv1d_stripe_stacked)
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import moe_gmm
@@ -134,4 +135,41 @@ def test_conv1d_stripe(B, L, Cin, Cout, K, stride, groups, pad):
     want = ref.conv1d_stripe(x, w, None, stride, groups, pad)
     got = conv1d_stripe(x, w, None, stride, groups, pad, interpret=True)
     assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,B,L,Cin,Cout,K,stride,groups,pad", [
+    (3, 2, 64, 8, 16, 7, 1, 1, "SAME"),
+    (2, 2, 64, 8, 16, 7, 2, 1, "SAME"),     # strided
+    (4, 1, 50, 12, 12, 4, 1, 12, "CAUSAL"),  # depthwise, odd length
+    (2, 2, 33, 8, 8, 7, 2, 4, "SAME"),      # grouped, odd length
+    (5, 3, 41, 4, 8, 7, 2, 2, "SAME"),      # odd length + stride
+])
+def test_conv1d_stripe_stacked(M, B, L, Cin, Cout, K, stride, groups, pad):
+    """Member-axis kernel (grid (member, batch, groups)) vs a vmapped
+    oracle — the fused ensemble bucket's conv path."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (M, B, L, Cin))
+    w = jax.random.normal(ks[1], (M, K, Cin // groups, Cout))
+    b = jax.random.normal(ks[2], (M, Cout))
+    want = jax.vmap(lambda xm, wm, bm: ref.conv1d_stripe(
+        xm, wm, bm, stride, groups, pad))(x, w, b)
+    got = conv1d_stripe_stacked(x, w, b, stride, groups, pad,
+                                interpret=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ops_conv1d_stacked_dispatch():
+    """ops.conv1d routes 4-D member-stacked inputs to the stacked paths
+    and keeps xla / pallas_interpret numerics aligned."""
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (3, 2, 40, 8))
+    w = jax.random.normal(ks[1], (3, 7, 2, 8))
+    b = jax.random.normal(ks[2], (3, 8))
+    want = ops.conv1d(x, w, b, stride=2, groups=4, impl="xla")
+    got = ops.conv1d(x, w, b, stride=2, groups=4,
+                     impl="pallas_interpret")
+    assert want.shape == (3, 2, 20, 8)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
