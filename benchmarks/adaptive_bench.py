@@ -1,0 +1,292 @@
+"""Adaptive-vs-static serving under patient churn: the control plane's
+acceptance harness.
+
+A DES load spike — the census tripling mid-run by default — is served
+two ways:
+
+* ``static``   — the selector composed for the initial load, frozen
+                 forever (the pre-control-plane behaviour);
+* ``adaptive`` — the full loop: per-epoch telemetry (arrivals +
+                 latencies replayed into ``SloTelemetry``) -> controller
+                 decision (shed / recompose / climb) -> warm-started
+                 ``recompose`` at the OBSERVED arrival rate -> selector
+                 swap for the next epoch.
+
+Writes ``BENCH_adaptive.json`` (per-epoch census, p50/p99, violation
+rate and the served selector's accuracy, plus a REAL wall-clock
+hot-swap segment demonstrating zero dropped queries) so the trajectory
+is tracked across PRs.  ``synthetic_testbed`` keeps the default run
+fast and deterministic; ``examples/serve_icu.py --adaptive`` drives the
+same harness with the trained zoo and measured member costs.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.control.controller import (AdaptiveController, ControllerConfig)
+from repro.control.swap import SelectorLadder
+from repro.control.telemetry import SloTelemetry
+from repro.core.bagging import roc_auc
+from repro.core.composer import ComposerParams, compose, recompose
+from repro.core.profiles import ModelProfile, ModelZoo, SystemConfig
+from repro.serving.latency import LatencyProfiler
+from repro.serving.simulator import SimConfig, simulate
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_adaptive.json")
+
+
+class _DesLadder(SelectorLadder):
+    """Ladder whose activation is a no-op: the DES reads
+    ``active_selector`` when it builds the next epoch's cost list."""
+
+    def _activate(self, selector: np.ndarray) -> None:
+        pass
+
+
+def synthetic_testbed(n: int = 10, n_val: int = 400, seed: int = 0,
+                      cost_lo: float = 0.04, cost_hi: float = 0.22
+                      ) -> Tuple[ModelZoo, np.ndarray, Callable]:
+    """A zoo where accuracy genuinely trades against latency: richer
+    (slower) members are individually stronger, and independent score
+    noise means bagging more members helps."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, n_val)
+    quality = np.linspace(0.5, 1.8, n) + rng.normal(0, 0.1, n)
+    scores = np.stack([
+        1.0 / (1.0 + np.exp(-(q * (2 * y - 1)
+                              + rng.normal(0, 2.0, n_val))))
+        for q in quality])
+    costs = np.linspace(cost_lo, cost_hi, n)
+    labels = (y == 1).astype(int)
+    profiles = [ModelProfile(
+        name=f"m{i}", depth=2 + i, width=16, macs=costs[i] * 1e9,
+        memory_bytes=1e6, modality=0, input_len=100,
+        val_auc=roc_auc(labels, scores[i])) for i in range(n)]
+    zoo = ModelZoo(profiles, val_scores=scores, val_labels=labels)
+
+    def f_a(b) -> float:
+        sel = scores[np.asarray(b, bool)]
+        return roc_auc(labels, sel.mean(axis=0)) if len(sel) else 0.5
+    return zoo, costs, f_a
+
+
+def _ladder_from(res, costs: np.ndarray) -> List[np.ndarray]:
+    """Cheapest -> richest degradation ladder around a composition:
+    the cheapest single member, the best previously profiled selector
+    at <= half the incumbent's cost, and the incumbent itself."""
+    costs = np.asarray(costs)
+
+    def cost_of(b):
+        return float(costs[np.asarray(b, bool)].sum())
+
+    cheap = np.zeros(len(costs), np.int8)
+    cheap[int(np.argmin(costs))] = 1
+    levels = [cheap]
+    half = cost_of(res.b_star) / 2
+    mid = [(a, b) for b, a in zip(res.B, res.Y_acc)
+           if 0 < cost_of(b) <= half and not np.array_equal(b, cheap)]
+    if mid:
+        levels.append(np.asarray(
+            max(mid, key=lambda t: t[0])[1], np.int8))
+    if not any(np.array_equal(l, res.b_star) for l in levels):
+        levels.append(res.b_star.astype(np.int8))
+    return levels
+
+
+def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
+                     slo: float, schedule: Sequence[Tuple[int, int]],
+                     adaptive: bool = True, epoch_seconds: float = 40.0,
+                     window_seconds: float = 10.0, n_devices: int = 2,
+                     seed: int = 0,
+                     compose_params: ComposerParams = None,
+                     recompose_params: ComposerParams = None,
+                     verbose: bool = False) -> Dict:
+    """Epoch-driven closed loop over the DES.  ``schedule`` is a list of
+    (n_epochs, census) phases; the initial composition always targets
+    the FIRST phase's census (that is the point: the static selector is
+    right for the load it was composed for)."""
+    costs = np.asarray(costs, np.float64)
+    epochs = [c for n_ep, c in schedule for _ in range(n_ep)]
+
+    def f_l_for(n_patients: int) -> LatencyProfiler:
+        return LatencyProfiler(
+            zoo, SystemConfig(n_devices=n_devices, n_patients=n_patients,
+                              window_seconds=window_seconds),
+            cost_fn=lambda i: costs[i], seed=seed)
+
+    res0 = compose(len(zoo), f_a, f_l_for(epochs[0]), slo,
+                   compose_params or ComposerParams(N=6, M=80, K=4,
+                                                    N0=10, seed=seed))
+    swapper = _DesLadder(res0.b_star)
+    swapper.set_ladder(_ladder_from(res0, costs))
+    telemetry = SloTelemetry(slo_seconds=slo,
+                             window_seconds=epoch_seconds,
+                             clock=lambda: 0.0)
+    state = {"warm": res0}
+
+    def recompose_fn(snap):
+        n_est = max(1, int(round(snap.arrival_rate * window_seconds)))
+        r = recompose(f_a, f_l_for(n_est), slo, warm_start=state["warm"],
+                      params=recompose_params
+                      or ComposerParams(N=4, M=80, K=4, N0=8, seed=seed))
+        state["warm"] = r
+        swapper.set_ladder(_ladder_from(r, costs))
+        return r.b_star
+
+    def profile_fn():
+        c = costs[swapper.active_selector.astype(bool)]
+        if not len(c):
+            return float("inf"), 0.0
+        return n_devices / float(c.sum()), float(c.max())
+
+    ctl = AdaptiveController(
+        telemetry, swapper, recompose_fn=recompose_fn,
+        config=ControllerConfig(slo_seconds=slo, cooldown_seconds=0.0,
+                                min_samples=10),
+        service_profile_fn=profile_fn, sync=True)
+
+    records: List[Dict] = []
+    for e, census in enumerate(epochs):
+        sel = swapper.active_selector.copy()
+        c_sel = list(costs[sel.astype(bool)])
+        r = simulate(c_sel, SimConfig(
+            n_patients=census, n_devices=n_devices,
+            window_seconds=window_seconds,
+            duration_seconds=epoch_seconds, seed=seed + 17 * e))
+        t0 = e * epoch_seconds
+        if adaptive:                          # static arm has no reader
+            for q in r.queries:
+                telemetry.record_arrival(t0 + q.t_window)
+                telemetry.record_served(
+                    q.latency, t0 + min(q.t_done, epoch_seconds))
+        lat = r.latencies()
+        rec = {"epoch": e, "t0_s": t0, "census": census,
+               "selector": np.flatnonzero(sel).tolist(),
+               "n_members": int(sel.sum()),
+               "accuracy": float(f_a(sel)),
+               "served": len(r.queries),
+               "p50_s": r.p(50), "p99_s": r.p(99),
+               "violation_rate": float(np.mean(lat > slo))
+               if len(lat) else 0.0}
+        if adaptive:
+            rec["decision"] = ctl.step(now=(e + 1) * epoch_seconds).value
+        records.append(rec)
+        if verbose:
+            print(f"  [{'adpt' if adaptive else 'stat'}] epoch {e} "
+                  f"census {census:3d} members {rec['n_members']:2d} "
+                  f"acc {rec['accuracy']:.3f} p99 {rec['p99_s']:7.3f}s "
+                  f"viol {rec['violation_rate']:.2f}"
+                  + (f" -> {rec.get('decision', '')}" if adaptive else ""))
+
+    served = sum(r["served"] for r in records)
+    viol = sum(r["violation_rate"] * r["served"] for r in records)
+    spike_start = schedule[0][0]
+    return {"epochs": records,
+            "violation_rate": viol / max(served, 1),
+            "p99_final_spike_s":
+                records[schedule[0][0] + schedule[1][0] - 1]["p99_s"]
+                if len(schedule) > 1 else records[-1]["p99_s"],
+            "mean_accuracy": float(np.mean(
+                [r["accuracy"] for r in records])),
+            "spike_start_epoch": spike_start,
+            "initial_selector": np.flatnonzero(res0.b_star).tolist(),
+            "actions": [(t, d.value) for t, d in ctl.log],
+            "n_recomposes": ctl.n_recomposes}
+
+
+def wallclock_hot_swap(n_queries: int = 48, n_swaps: int = 3,
+                       input_len: int = 250, pool: Sequence = None,
+                       sel_a: np.ndarray = None, sel_b: np.ndarray = None,
+                       window_fn: Callable = None, n_workers: int = 2,
+                       verbose: bool = True) -> Dict:
+    """REAL jitted serving through the batch-aware server while the
+    control plane hot-swaps selectors mid-stream: every submitted query
+    must be served (zero dropped), across ``n_swaps`` swaps.  Defaults
+    to a randomly-initialised reduced zoo split into even/odd selectors;
+    pass ``pool``/``sel_a``/``sel_b``/``window_fn`` to run it on trained
+    members (examples/serve_icu.py --adaptive)."""
+    from repro.control.swap import HotSwapper
+    from repro.serving.server import EnsembleServer
+
+    if pool is None:
+        import jax
+        from repro.configs.ecg_zoo import zoo_specs
+        from repro.models.ecg_resnext import init_ecg
+        from repro.serving.pipeline import ZooMember
+        specs = zoo_specs(reduced=True, input_len=input_len)
+        pool = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+                for i, s in enumerate(specs)]
+    n = len(pool)
+    if sel_a is None:
+        sel_a = np.asarray([i % 2 == 0 for i in range(n)], np.int8)
+    if sel_b is None:
+        sel_b = np.asarray([i % 2 == 1 for i in range(n)], np.int8)
+    if window_fn is None:
+        window_fn = lambda rng, i: {
+            "ecg": rng.standard_normal((3, input_len))
+            .astype(np.float32)}
+    swapper = HotSwapper(pool, sel_a, warmup_batch_sizes=(1, 2, 4, 8))
+    # register both selectors as the ladder so toggling between them
+    # stays pre-staged (off-ladder selectors are evicted after a swap)
+    swapper.set_ladder([sel_b, sel_a], prestage=True)
+    srv = EnsembleServer(batch_handler=swapper.facade.predict_batch,
+                         n_workers=n_workers, max_batch=8,
+                         max_wait_ms=2.0).start()
+    rng = np.random.default_rng(0)
+    stride = max(1, n_queries // (n_swaps + 1))
+    submitted = 0
+    for i in range(n_queries):
+        if i and i % stride == 0 and swapper.facade.swap_count < n_swaps:
+            swapper.swap_to(sel_b if (i // stride) % 2 else sel_a)
+        submitted += bool(srv.submit(i, window_fn(rng, i)))
+    stats = srv.stop()
+    out = {"submitted": submitted, "served": stats.served,
+           "dropped": submitted - stats.served,
+           "swaps": swapper.facade.swap_count,
+           "p95_ms": stats.p(95) * 1e3}
+    if verbose:
+        print(f"  wall-clock hot-swap: {out['served']}/{out['submitted']}"
+              f" served across {out['swaps']} swaps "
+              f"({out['dropped']} dropped), p95 {out['p95_ms']:.1f} ms")
+    return out
+
+
+def bench_adaptive(slo: float = 1.0, n1: int = 24,
+                   schedule: Sequence[Tuple[int, int]] = None,
+                   seed: int = 0, verbose: bool = True,
+                   write_json: bool = True, wallclock: bool = True) -> Dict:
+    """Static-vs-adaptive under a census spike (n_patients tripling
+    mid-run by default, then receding).  Records per-epoch violation
+    rate, p99, and the served selector's accuracy over time."""
+    zoo, costs, f_a = synthetic_testbed(seed=seed)
+    schedule = schedule or [(3, n1), (4, 3 * n1), (3, n1)]
+    common = dict(zoo=zoo, costs=costs, f_a=f_a, slo=slo,
+                  schedule=schedule, seed=seed, verbose=verbose)
+    if verbose:
+        print(f"\nadaptive serving bench (census "
+              f"{' -> '.join(str(c) for _, c in schedule)}, "
+              f"SLO {slo:.1f}s):")
+    static = run_adaptive_sim(adaptive=False, **common)
+    adaptive = run_adaptive_sim(adaptive=True, **common)
+    out = {"slo_s": slo, "schedule": [list(s) for s in schedule],
+           "static": static, "adaptive": adaptive}
+    if wallclock:
+        out["wallclock_swap"] = wallclock_hot_swap(verbose=verbose)
+    if verbose:
+        print(f"  static  : viol {static['violation_rate']:.2f}  "
+              f"p99@spike {static['p99_final_spike_s']:.2f}s  "
+              f"mean acc {static['mean_accuracy']:.3f}")
+        print(f"  adaptive: viol {adaptive['violation_rate']:.2f}  "
+              f"p99@spike {adaptive['p99_final_spike_s']:.2f}s  "
+              f"mean acc {adaptive['mean_accuracy']:.3f}  "
+              f"({adaptive['n_recomposes']} recomposes, "
+              f"{len(adaptive['actions'])} actions)")
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(out, f, indent=2)
+    return out

@@ -76,6 +76,15 @@ def main(argv=None) -> None:
               reps=3 if args.quick else 10,
               write_json=not args.quick),
           lambda t: f"speedup={t['speedup_fused_microbatch']:.2f}x")
+    # adaptive control plane: static-vs-adaptive under a census spike
+    # (quick mode keeps the noisy numbers out of the tracked JSON)
+    from benchmarks.adaptive_bench import bench_adaptive
+    bench("adaptive_serving",
+          lambda: bench_adaptive(write_json=not args.quick,
+                                 wallclock=not args.quick),
+          lambda t: "viol_static/adaptive="
+          + f"{t['static']['violation_rate']:.2f}/"
+          + f"{t['adaptive']['violation_rate']:.2f}")
     bench("roofline_table",
           bench_roofline,
           lambda t: f"n_records={len(t)}")

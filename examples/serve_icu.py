@@ -3,7 +3,13 @@ served ensemble (Fig. 10 conditions) + a real wall-clock fused-serving
 demo (bucketed stacked dispatch + cross-patient micro-batching through
 the batch-aware ``EnsembleServer``).
 
-    PYTHONPATH=src:. python examples/serve_icu.py [--beds 64]
+``--adaptive`` additionally exercises the online control plane against
+a census spike (beds tripling mid-run): per-epoch telemetry drives the
+controller (shed / warm-started recompose / climb) with the trained zoo
+and measured member costs, and a real hot-swap segment shows selector
+swaps mid-stream with zero dropped queries.
+
+    PYTHONPATH=src:. python examples/serve_icu.py [--beds 64] [--adaptive]
 """
 import argparse
 import sys
@@ -29,6 +35,9 @@ def main():
     ap.add_argument("--beds", type=int, default=64)
     ap.add_argument("--devices", type=int, default=2)
     ap.add_argument("--minutes", type=float, default=3.0)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run the online control plane against a "
+                         "census spike (beds tripling mid-run)")
     args = ap.parse_args()
 
     zoo, extras = build_zoo(n_patients=16, clips=8, steps=120)
@@ -91,6 +100,50 @@ def main():
           f"({(svc.dispatch_count - d0) / max(stats.served, 1):.2f}"
           f"/query; mean batch "
           f"{srv.batcher.stats.mean_batch:.1f})")
+
+    if not args.adaptive:
+        return
+
+    # ------------------------------------------- online control plane
+    # the same closed loop as benchmarks/adaptive_bench, but with the
+    # TRAINED zoo and its measured per-member costs: census triples
+    # mid-run, the static selector from above stays frozen, the
+    # adaptive one sheds / recomposes / climbs
+    from benchmarks.adaptive_bench import (run_adaptive_sim,
+                                           wallclock_hot_swap)
+
+    schedule = [(3, args.beds), (4, 3 * args.beds), (3, args.beds)]
+    print(f"\nadaptive control plane (census "
+          f"{' -> '.join(str(c) for _, c in schedule)}, "
+          f"SLO {budget * 1000:.0f} ms):")
+    common = dict(zoo=zoo, costs=extras["measured_costs"], f_a=f_a,
+                  slo=budget, schedule=schedule,
+                  n_devices=args.devices, verbose=True)
+    st = run_adaptive_sim(adaptive=False, **common)
+    ad = run_adaptive_sim(adaptive=True, **common)
+    print(f"  static  : viol {st['violation_rate']:.2f}  "
+          f"p99@spike {st['p99_final_spike_s'] * 1000:.0f} ms")
+    print(f"  adaptive: viol {ad['violation_rate']:.2f}  "
+          f"p99@spike {ad['p99_final_spike_s'] * 1000:.0f} ms  "
+          f"({ad['n_recomposes']} recomposes)")
+
+    # real hot-swap mid-stream on the trained members: the full zoo is
+    # the pool, selectors toggle between the composed ensemble and its
+    # cheapest member; every submitted query is served across the swaps
+    pool = [ZooMember(extras["specs"][i],
+                      extras["params"][zoo.profiles[i].name])
+            for i in range(len(zoo))]
+    cheap = np.zeros(len(zoo), np.int8)
+    cheap[int(np.argmin(extras["measured_costs"]))] = 1
+    swap = wallclock_hot_swap(
+        n_queries=3 * n_demo, n_swaps=2, pool=pool,
+        sel_a=res.b_star, sel_b=cheap, n_workers=args.devices,
+        window_fn=lambda r_, i: {"ecg": ecg_clip(
+            r_, sample_patient(r_, i % 2), seconds=3)},
+        verbose=False)
+    print(f"  hot-swap mid-stream: {swap['served']}/{swap['submitted']} "
+          f"served across {swap['swaps']} swaps "
+          f"({swap['dropped']} dropped)")
 
 
 if __name__ == "__main__":

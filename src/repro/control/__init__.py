@@ -1,0 +1,18 @@
+"""Online adaptive control plane.
+
+Closes the loop between live serving telemetry and ensemble
+composition: ``telemetry`` taps the serving data plane
+(``EnsembleServer`` / ``MicroBatcher``) for sliding-window SLO signals
+and the online empirical arrival curve; ``controller`` turns those
+signals into actions (degradation-ladder shed/climb, background
+recomposition); ``swap`` pre-stages selector services and hot-swaps
+them atomically between micro-batch flushes with zero dropped queries.
+"""
+from repro.control.controller import (AdaptiveController, ControllerConfig,
+                                      Decision)
+from repro.control.swap import HotSwapper, SelectorLadder, SwappableService
+from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+
+__all__ = ["AdaptiveController", "ControllerConfig", "Decision",
+           "HotSwapper", "SelectorLadder", "SwappableService",
+           "SloTelemetry", "TelemetrySnapshot"]

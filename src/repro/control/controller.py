@@ -1,0 +1,213 @@
+"""The adaptive controller: telemetry -> decision -> actuation.
+
+One control iteration (``step``) reads a consistent telemetry snapshot
+and picks one of four actions:
+
+* ``SHED``      — SLO is being violated NOW (violation rate above the
+                  high-water mark, or observed p99 over the SLO): step
+                  down the degradation ladder immediately (a pre-staged
+                  pointer flip), and kick off a background recompose to
+                  find the best ensemble for the new load;
+* ``RECOMPOSE`` — predicted SLO risk (online network-calculus
+                  T_s + T_q crossing the SLO) or arrival-rate drift
+                  beyond the trigger factor: re-run the composer
+                  warm-started from the incumbent, then hot-swap;
+* ``CLIMB``     — healthy with headroom (violations under the
+                  low-water mark and p99 under ``headroom_frac`` of the
+                  SLO): step back up the ladder;
+* ``HOLD``      — otherwise, or within the post-action cooldown.
+
+Recomposition runs in a daemon thread (``sync=False``) so the serving
+hot path never blocks on the search; the DES bench and unit tests use
+``sync=True`` for determinism.  ``recompose_fn(snapshot)`` is injected:
+it returns the new selector (or None to keep the incumbent) and may
+also rebuild the ladder around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.control.swap import SelectorLadder
+from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+
+
+class Decision(enum.Enum):
+    HOLD = "hold"
+    SHED = "shed"
+    CLIMB = "climb"
+    RECOMPOSE = "recompose"
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    slo_seconds: float = 1.0
+    violation_high: float = 0.10   # violation rate that forces a shed
+    violation_low: float = 0.01    # below this (plus headroom) => climb
+    headroom_frac: float = 0.5     # p99 <= frac * SLO counts as headroom
+    drift_factor: float = 1.5      # arrival-rate drift trigger (x or /x)
+    # the online T_q bound is worst-case-burst conservative; require the
+    # predicted T_s + T_q to exceed this multiple of the SLO before
+    # treating it as risk, so a persistently tight bound cannot thrash
+    # the composer while observed latency is healthy
+    predicted_factor: float = 1.2
+    cooldown_seconds: float = 10.0
+    min_samples: int = 20          # served samples needed to act
+
+
+class AdaptiveController:
+    def __init__(self, telemetry: SloTelemetry, swapper: SelectorLadder,
+                 recompose_fn: Optional[
+                     Callable[[TelemetrySnapshot],
+                              Optional[np.ndarray]]] = None,
+                 config: Optional[ControllerConfig] = None,
+                 service_profile_fn: Optional[
+                     Callable[[], Tuple[float, float]]] = None,
+                 sync: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        """``service_profile_fn`` returns (mu, T_s) of the ACTIVE
+        ensemble so snapshots carry the online T_q bound."""
+        self.telemetry = telemetry
+        self.swapper = swapper
+        self.recompose_fn = recompose_fn
+        if config is None:
+            config = ControllerConfig(slo_seconds=telemetry.slo)
+        elif abs(config.slo_seconds - telemetry.slo) > 1e-12:
+            # violation_rate is computed by telemetry against ITS slo;
+            # decide() compares p99 against the config's — they must be
+            # the same threshold or the two signals contradict
+            raise ValueError(
+                f"config.slo_seconds={config.slo_seconds} != "
+                f"telemetry.slo={telemetry.slo}")
+        self.config = config
+        self.service_profile_fn = service_profile_fn
+        self.sync = sync
+        self.clock = clock
+        self.log: List[Tuple[float, Decision]] = []
+        self.baseline_rate: Optional[float] = None  # rate at last compose
+        self.n_recomposes = 0
+        self._last_action_t = -float("inf")
+        self._recomposing = threading.Event()
+        self._recompose_thread: Optional[threading.Thread] = None
+        self._monitor: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ---------------------------------------------------------- policy
+    def decide(self, snap: TelemetrySnapshot) -> Decision:
+        """Pure policy (no side effects) — unit-testable in isolation."""
+        c = self.config
+        if snap.n_served < c.min_samples:
+            return Decision.HOLD
+        if (snap.violation_rate >= c.violation_high
+                or snap.p99 > c.slo_seconds or snap.n_shed > 0):
+            return Decision.SHED if self.swapper.can_shed() \
+                else Decision.RECOMPOSE
+        if np.isfinite(snap.predicted_latency) \
+                and snap.predicted_latency > c.predicted_factor \
+                * c.slo_seconds:
+            return Decision.RECOMPOSE          # predicted risk, act early
+        if self.baseline_rate and snap.arrival_rate > 0:
+            ratio = snap.arrival_rate / self.baseline_rate
+            if ratio >= c.drift_factor or ratio <= 1.0 / c.drift_factor:
+                return Decision.RECOMPOSE      # load drifted: re-search
+        if (snap.violation_rate <= c.violation_low
+                and snap.p99 <= c.headroom_frac * c.slo_seconds
+                and self.swapper.can_climb()):
+            return Decision.CLIMB
+        return Decision.HOLD
+
+    # ------------------------------------------------------------- act
+    def snapshot(self, now: Optional[float] = None) -> TelemetrySnapshot:
+        mu = ts = None
+        if self.service_profile_fn is not None:
+            mu, ts = self.service_profile_fn()
+        # evidence must postdate the last actuation: the violation burst
+        # that justified a shed stays in the sliding window for up to
+        # window_seconds and must not re-trigger a shed per cooldown,
+        # cascading the ladder to the floor
+        since = self._last_action_t \
+            if np.isfinite(self._last_action_t) else None
+        return self.telemetry.snapshot(mu=mu, ts=ts or 0.0, now=now,
+                                       since=since)
+
+    def step(self, now: Optional[float] = None) -> Decision:
+        """One control iteration: snapshot, decide, act."""
+        now = self.clock() if now is None else now
+        if now - self._last_action_t < self.config.cooldown_seconds:
+            return Decision.HOLD
+        snap = self.snapshot(now)
+        if self.baseline_rate is None and snap.arrival_rate > 0:
+            self.baseline_rate = snap.arrival_rate
+        decision = self.decide(snap)
+        acted = False
+        if decision is Decision.SHED:
+            acted = self.swapper.shed()
+            # find the right ensemble for the new load in the background
+            acted = self._launch_recompose(snap) or acted
+        elif decision is Decision.CLIMB:
+            acted = self.swapper.climb()
+        elif decision is Decision.RECOMPOSE:
+            acted = self._launch_recompose(snap)
+        if not acted:
+            # nothing actually changed (rung race, recompose already in
+            # flight): don't log a phantom action or start a cooldown
+            # that would delay the real corrective step
+            return Decision.HOLD
+        self._last_action_t = now
+        self.log.append((now, decision))
+        return decision
+
+    def _launch_recompose(self, snap: TelemetrySnapshot) -> bool:
+        """Returns True iff a recompose was actually started."""
+        if self.recompose_fn is None or self._recomposing.is_set():
+            return False
+        self._recomposing.set()
+        if self.sync:
+            try:
+                self._recompose(snap)
+            finally:
+                self._recomposing.clear()
+            return True
+
+        def run():
+            try:
+                self._recompose(snap)
+            finally:
+                self._recomposing.clear()
+        self._recompose_thread = threading.Thread(target=run, daemon=True)
+        self._recompose_thread.start()
+        return True
+
+    def _recompose(self, snap: TelemetrySnapshot) -> None:
+        selector = self.recompose_fn(snap)
+        self.n_recomposes += 1
+        self.baseline_rate = snap.arrival_rate or self.baseline_rate
+        if selector is not None and not np.array_equal(
+                np.asarray(selector, np.int8),
+                self.swapper.active_selector):
+            self.swapper.swap_to(selector)
+
+    def join_recompose(self, timeout: float = 60.0) -> None:
+        t = self._recompose_thread
+        if t is not None:
+            t.join(timeout)
+
+    # --------------------------------------------------- monitor loop
+    def start(self, period_seconds: float = 1.0) -> "AdaptiveController":
+        def loop():
+            while not self._stop.wait(period_seconds):
+                self.step()
+        self._monitor = threading.Thread(target=loop, daemon=True)
+        self._monitor.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=5.0)
+        self.join_recompose(timeout=5.0)

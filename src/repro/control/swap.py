@@ -1,0 +1,211 @@
+"""Zero-downtime selector hot-swap + degradation ladder (the control
+plane's actuator).
+
+``SwappableService`` is the atomically swappable facade the server's
+workers call: a micro-batch flush grabs a reference to the current
+``EnsembleService`` under the lock and completes on it even if a swap
+lands mid-flush, while the NEXT flush sees the new service — the ingest
+queue and batcher are never touched, so no query is ever dropped by a
+swap.
+
+``HotSwapper`` owns the expensive part off the hot path: building the
+new selector's stacked bucket params and compiling/warming its fused
+dispatch functions (``EnsembleService`` staging), so the swap itself is
+a pointer flip.  It extends ``SelectorLadder`` — an ordered
+cheapest-to-richest family of selectors the controller walks: ``shed``
+steps down to a cheaper ensemble under overload, ``climb`` steps back
+up when load recedes.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class SwappableService:
+    """Atomic indirection over the live ``EnsembleService``."""
+
+    def __init__(self, service):
+        self._lock = threading.Lock()
+        self._service = service
+        self.swap_count = 0
+
+    @property
+    def current(self):
+        with self._lock:
+            return self._service
+
+    def swap(self, new_service):
+        """Atomically install ``new_service``; returns the old one.
+        In-flight flushes keep their reference and finish on the old
+        service — the swap lands between flushes."""
+        with self._lock:
+            old, self._service = self._service, new_service
+            self.swap_count += 1
+            return old
+
+    # hot-path delegates (bind these as the server's handlers)
+    def predict(self, windows) -> float:
+        return self.current.predict(windows)
+
+    def predict_batch(self, batch) -> List[float]:
+        return self.current.predict_batch(batch)
+
+
+class SelectorLadder:
+    """Degradation ladder over binary selectors, cheapest -> richest.
+
+    Subclasses implement ``_activate(selector)`` to make a selector
+    live; the base class tracks the active selector and the ladder
+    position.  All transitions go through ``swap_to`` so the activation
+    hook is the single swap point.
+    """
+
+    def __init__(self, initial_selector: np.ndarray):
+        self.active_selector = np.asarray(initial_selector, np.int8).copy()
+        self._ladder: List[np.ndarray] = []
+        self._pos = -1
+        # reentrant: shed()/climb() read the ladder and then swap_to()
+        # under the same lock, and a concurrent set_ladder (e.g. the
+        # background recompose rebuilding the family) must not let them
+        # index a rung that no longer exists
+        self._swap_lock = threading.RLock()
+
+    # ------------------------------------------------------------ ladder
+    def set_ladder(self, selectors: Sequence[np.ndarray]) -> None:
+        """Install the cheapest->richest family (the active selector
+        keeps serving; its rung is found by match, -1 if off-ladder)."""
+        with self._swap_lock:
+            self._ladder = [np.asarray(s, np.int8).copy()
+                            for s in selectors]
+            self._pos = self._find(self.active_selector)
+
+    def _find(self, selector: np.ndarray) -> int:
+        for i, s in enumerate(self._ladder):
+            if np.array_equal(s, selector):
+                return i
+        return -1
+
+    @property
+    def ladder(self) -> List[np.ndarray]:
+        return [s.copy() for s in self._ladder]
+
+    @property
+    def ladder_pos(self) -> int:
+        return self._pos
+
+    def can_shed(self) -> bool:
+        return self._pos > 0
+
+    def can_climb(self) -> bool:
+        return bool(self._ladder) and 0 <= self._pos < len(self._ladder) - 1
+
+    def shed(self) -> bool:
+        """Step DOWN to the next cheaper rung (overload relief)."""
+        with self._swap_lock:
+            if not self.can_shed():
+                return False
+            self.swap_to(self._ladder[self._pos - 1])
+            return True
+
+    def climb(self) -> bool:
+        """Step UP to the next richer rung (load receded)."""
+        with self._swap_lock:
+            if not self.can_climb():
+                return False
+            self.swap_to(self._ladder[self._pos + 1])
+            return True
+
+    # ------------------------------------------------------------- swap
+    def swap_to(self, selector: np.ndarray) -> None:
+        sel = np.asarray(selector, np.int8).copy()
+        with self._swap_lock:
+            self._activate(sel)
+            self.active_selector = sel
+            self._pos = self._find(sel)
+
+    def _activate(self, selector: np.ndarray) -> None:
+        raise NotImplementedError
+
+
+class HotSwapper(SelectorLadder):
+    """Pre-stages ``EnsembleService``s for selectors over a shared
+    member pool and swaps them into the ``facade`` atomically.
+
+    ``stage`` is the expensive step (param stacking + jit warmup) and
+    runs OFF the hot path — by the controller's background thread, or
+    eagerly for every ladder rung via ``set_ladder(prestage=True)``.
+    Staged services are cached by selector, so ladder oscillation
+    (shed/climb/shed) never recompiles.
+    """
+
+    def __init__(self, pool: Sequence, initial_selector: np.ndarray,
+                 vitals_model=None, labs_model=None,
+                 warmup_batch_sizes: Sequence[int] = (1, 2, 4, 8),
+                 fused: bool = True, impl: str = "xla"):
+        super().__init__(initial_selector)
+        self.pool = list(pool)
+        self.vitals_model = vitals_model
+        self.labs_model = labs_model
+        self.warmup_batch_sizes = tuple(warmup_batch_sizes)
+        self.fused = fused
+        self.impl = impl
+        self._staged: Dict[bytes, object] = {}
+        self._stage_lock = threading.Lock()    # guards the cache dict
+        self._build_lock = threading.Lock()    # serializes builds
+        self.facade = SwappableService(self.stage(initial_selector))
+
+    def stage(self, selector: np.ndarray):
+        """Build + warm the selector's service (stacked bucket params,
+        compiled fused dispatch at the pow2 flush sizes).  Idempotent:
+        cached per selector; concurrent staging of the same selector
+        waits on the build lock instead of duplicating the expensive
+        stack-and-compile."""
+        from repro.serving.pipeline import EnsembleService
+        sel = np.asarray(selector, np.int8)
+        key = sel.tobytes()
+        with self._stage_lock:
+            svc = self._staged.get(key)
+        if svc is not None:
+            return svc
+        with self._build_lock:
+            with self._stage_lock:             # built while we waited?
+                svc = self._staged.get(key)
+            if svc is not None:
+                return svc
+            svc = EnsembleService.for_selector(
+                self.pool, sel, vitals_model=self.vitals_model,
+                labs_model=self.labs_model, fused=self.fused,
+                impl=self.impl)
+            if len(svc.members):
+                svc.warmup(batch_sizes=self.warmup_batch_sizes)
+            with self._stage_lock:
+                self._staged[key] = svc
+            return svc
+
+    def set_ladder(self, selectors: Sequence[np.ndarray],
+                   prestage: bool = True) -> None:
+        super().set_ladder(selectors)
+        if prestage:
+            for s in self._ladder:
+                self.stage(s)
+
+    def _activate(self, selector: np.ndarray) -> None:
+        self.facade.swap(self.stage(selector))
+        self._evict_stale(selector)
+
+    def _evict_stale(self, active: np.ndarray) -> None:
+        """Drop staged services that are neither active nor a ladder
+        rung: under drifting load every recompose can yield a novel
+        selector, and each staged service holds stacked param copies +
+        compiled dispatch fns — without eviction a long-running
+        deployment leaks until OOM.  (A service still finishing an
+        in-flight flush stays alive via the flush's reference.)"""
+        keep = {np.asarray(active, np.int8).tobytes()}
+        with self._swap_lock:
+            keep.update(s.tobytes() for s in self._ladder)
+        with self._stage_lock:
+            for k in [k for k in self._staged if k not in keep]:
+                del self._staged[k]

@@ -1,0 +1,179 @@
+"""Live SLO telemetry for the serving hot path (the control plane's
+sensor).
+
+``SloTelemetry`` is the tap the data plane feeds — pass it to
+``EnsembleServer(telemetry=...)`` (every ingest is an arrival, every
+retired query a latency sample, every full-queue rejection a shed) or
+drive it explicitly when replaying a DES trace.  Over a sliding window
+it derives:
+
+* p50/p99 latency and the SLO violation rate;
+* an arrival-rate estimate (queries/s over the window);
+* the ONLINE empirical arrival curve and the network-calculus T_q
+  bound — the same alpha/beta machinery ``serving/latency.py`` uses
+  offline (§3.4, Fig. 5), now fed by the observed trace so the
+  controller can predict queueing risk before violations materialize.
+
+All mutations and reads are lock-guarded; ``snapshot()`` is the
+consistent view the controller consumes.  The clock is injectable so
+the DES and unit tests can drive virtual time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Deque, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.latency import arrival_curve, queueing_bound
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySnapshot:
+    """One consistent reading of the sliding window."""
+    t: float
+    window_seconds: float
+    n_arrivals: int
+    n_served: int
+    n_shed: int
+    arrival_rate: float            # queries/s over the effective window
+    p50: float
+    p99: float
+    violation_rate: float          # frac of served with latency > SLO
+    ts: float = float("nan")       # active selector's T_s (if provided)
+    tq_bound: float = float("nan")  # online network-calculus T_q bound
+
+    @property
+    def predicted_latency(self) -> float:
+        """T-hat = T_s + T_q from the ONLINE arrival curve (nan when no
+        service profile was supplied to ``snapshot``)."""
+        return self.ts + self.tq_bound
+
+
+class SloTelemetry:
+    def __init__(self, slo_seconds: float = 1.0,
+                 window_seconds: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.slo = slo_seconds
+        self.window = window_seconds
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._arrivals: Deque[float] = collections.deque()
+        self._served: Deque[Tuple[float, float]] = collections.deque()
+        self._shed: Deque[float] = collections.deque()
+        self._t0: Optional[float] = None       # first event ever seen
+
+    # ------------------------------------------------------------ feed
+    def record_arrival(self, t: Optional[float] = None) -> None:
+        t = self.clock() if t is None else t
+        with self._lock:
+            self._note_t0(t)
+            self._arrivals.append(t)
+            self._prune(t)        # amortized O(1): memory stays O(window)
+
+    def record_served(self, latency: float,
+                      t: Optional[float] = None) -> None:
+        t = self.clock() if t is None else t
+        with self._lock:
+            self._note_t0(t)
+            self._served.append((t, float(latency)))
+            self._prune(t)
+
+    def record_shed(self, t: Optional[float] = None) -> None:
+        t = self.clock() if t is None else t
+        with self._lock:
+            self._note_t0(t)
+            self._shed.append(t)
+            self._prune(t)
+
+    def _note_t0(self, t: float) -> None:
+        if self._t0 is None:
+            self._t0 = t
+
+    def _prune(self, now: float) -> None:
+        cut = now - self.window
+        for dq in (self._arrivals, self._shed):
+            while dq and dq[0] <= cut:
+                dq.popleft()
+        while self._served and self._served[0][0] <= cut:
+            self._served.popleft()
+
+    # ------------------------------------------------------------ read
+    def arrivals(self, now: Optional[float] = None) -> np.ndarray:
+        now = self.clock() if now is None else now
+        with self._lock:
+            self._prune(now)
+            return np.asarray(self._arrivals, np.float64)
+
+    def latencies(self, now: Optional[float] = None) -> np.ndarray:
+        now = self.clock() if now is None else now
+        with self._lock:
+            self._prune(now)
+            return np.asarray([l for _, l in self._served], np.float64)
+
+    def arrival_rate(self, now: Optional[float] = None) -> float:
+        """Arrivals/s over the effective window (shorter than
+        ``window_seconds`` until that much history exists)."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            self._prune(now)
+            n = len(self._arrivals)
+            span = self.window if self._t0 is None \
+                else min(self.window, max(now - self._t0, 1e-9))
+            return n / span
+
+    def arrival_curve(self, dts: np.ndarray,
+                      now: Optional[float] = None) -> np.ndarray:
+        """The ONLINE empirical arrival curve alpha(dt) over the
+        sliding window — the live counterpart of the profiler's
+        synthetic trace."""
+        return arrival_curve(self.arrivals(now), dts)
+
+    def queueing_bound(self, mu: float, T0: float,
+                       now: Optional[float] = None) -> float:
+        """Online network-calculus T_q bound against the rate-latency
+        service curve beta(t) = mu * (t - T0)+ of the ACTIVE ensemble."""
+        return queueing_bound(self.arrivals(now), mu, T0)
+
+    def snapshot(self, mu: Optional[float] = None, ts: float = 0.0,
+                 now: Optional[float] = None,
+                 since: Optional[float] = None) -> TelemetrySnapshot:
+        """``since`` restricts the reading to events AFTER that time —
+        the controller passes its last actuation time so decisions rest
+        on post-action evidence only (a violation burst that triggered
+        a shed must not re-trigger it for the rest of the window)."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            self._prune(now)
+            if since is None:
+                arr = np.asarray(self._arrivals, np.float64)
+                lat = np.asarray([l for _, l in self._served],
+                                 np.float64)
+                n_shed = len(self._shed)
+            else:
+                arr = np.asarray([t for t in self._arrivals
+                                  if t > since], np.float64)
+                lat = np.asarray([l for t, l in self._served
+                                  if t > since], np.float64)
+                n_shed = sum(1 for t in self._shed if t > since)
+            start = now if self._t0 is None else self._t0
+            if since is not None:
+                start = max(start, since)
+            span = self.window if self._t0 is None \
+                else min(self.window, max(now - start, 1e-9))
+        p50 = float(np.percentile(lat, 50)) if len(lat) else 0.0
+        p99 = float(np.percentile(lat, 99)) if len(lat) else 0.0
+        viol = float(np.mean(lat > self.slo)) if len(lat) else 0.0
+        tq = float("nan")
+        if mu is not None:
+            tq = queueing_bound(arr, mu, 0.0)
+        return TelemetrySnapshot(
+            t=now, window_seconds=self.window,
+            n_arrivals=len(arr), n_served=len(lat), n_shed=n_shed,
+            arrival_rate=len(arr) / span,
+            p50=p50, p99=p99, violation_rate=viol,
+            ts=float(ts) if mu is not None else float("nan"),
+            tq_bound=tq)

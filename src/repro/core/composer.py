@@ -54,6 +54,18 @@ def _profile(B_new, f_a, f_l):
     return acc, lat
 
 
+def _screen(surrogates: SurrogatePair, candidates: np.ndarray,
+            latency_budget: float, soft, k: int) -> np.ndarray:
+    """Surrogate screening (lines 17-19): estimated accuracy plus the
+    one-sided soft latency penalty, top-k by score.  Shared by the
+    search loop and recompose's warm-start seed selection so the
+    screening objective cannot drift between them."""
+    a_hat, l_hat = surrogates.predict(candidates)
+    scores = a_hat + np.asarray(
+        [soft(latency_budget - l) for l in l_hat])
+    return candidates[np.argsort(-scores, kind="stable")[:k]]
+
+
 def compose(n_models: int,
             f_a: Callable[[np.ndarray], float],
             f_l: Callable[[np.ndarray], float],
@@ -113,11 +125,7 @@ def compose(n_models: int,
             break
 
         # ---- surrogate screening (lines 17-19) -------------------------
-        a_hat, l_hat = surrogates.predict(B_prime)
-        scores = a_hat + np.asarray(
-            [soft(latency_budget - l) for l in l_hat])
-        top = np.argsort(-scores, kind="stable")[:prm.K]
-        B_new = B_prime[top]
+        B_new = _screen(surrogates, B_prime, latency_budget, soft, prm.K)
 
         # ---- trajectory bookkeeping ------------------------------------
         feas = Y_lat <= latency_budget
@@ -144,3 +152,58 @@ def compose(n_models: int,
         latency=float(Y_lat[j]), feasible=feasible,
         n_profiler_calls=calls, B=B, Y_acc=Y_acc, Y_lat=Y_lat,
         history=history, wall_seconds=time.time() - t0)
+
+
+def recompose(f_a: Callable[[np.ndarray], float],
+              f_l: Callable[[np.ndarray], float],
+              latency_budget: float,
+              warm_start: ComposerResult,
+              params: Optional[ComposerParams] = None,
+              seed_pool: int = 6) -> ComposerResult:
+    """Incremental Algorithm-1 re-run: the online control plane's inner
+    loop, warm-started from a previous ``ComposerResult``.
+
+    Two things carry over from the previous run:
+
+    * accuracy observations — f_a is load-invariant, so every
+      previously profiled (b, acc) pair becomes a memo entry and only
+      genuinely NEW selectors hit the accuracy profiler;
+    * the incumbent's surrogate — refit on the previous profiled set,
+      it screens a genetic neighbourhood of b_star to pick the
+      warm-start seeds (prior latencies are stale in absolute terms
+      under the new load but still rank candidates by cost).
+
+    Latency is always re-profiled: f_l must reflect the CURRENT load
+    (arrival rate / census), which is exactly what changed.
+    """
+    prev = warm_start
+    n_models = prev.B.shape[1]
+    prm = params or ComposerParams(N=4, N0=8, M=120, K=6)
+    rng = np.random.default_rng(prm.seed + 1)
+    soft = soft_delta(prm.lam)
+
+    memo: Dict[bytes, float] = {
+        np.asarray(b, np.int8).tobytes(): float(a)
+        for b, a in zip(prev.B, prev.Y_acc)}
+
+    def f_a_memo(b: np.ndarray) -> float:
+        k = np.asarray(b, np.int8).tobytes()
+        if k not in memo:
+            memo[k] = float(f_a(b))
+        return memo[k]
+
+    # seeds: the incumbent + the best previously profiled selectors
+    seeds: List[np.ndarray] = [prev.b_star.astype(np.int8)]
+    for j in np.argsort(-prev.Y_acc)[:seed_pool]:
+        seeds.append(prev.B[j].astype(np.int8))
+
+    # surrogate-screened genetic neighbourhood of the incumbent
+    prior = SurrogatePair.from_observations(prev.B, prev.Y_acc,
+                                            prev.Y_lat, seed=prm.seed)
+    cand = explore(np.stack(seeds), prm.M, prm.S, prm.p, prm.q, rng)
+    if len(cand):
+        take = max(0, prm.N0 - len(seeds))
+        seeds += list(_screen(prior, cand, latency_budget, soft, take))
+
+    return compose(n_models, f_a_memo, f_l, latency_budget,
+                   params=prm, warm_start=seeds)

@@ -21,6 +21,18 @@ class SurrogatePair:
                                 max_features=None, seed=seed + 1)
         self._fitted = False
 
+    @property
+    def is_fitted(self) -> bool:
+        return self._fitted
+
+    @classmethod
+    def from_observations(cls, B: np.ndarray, y_acc: np.ndarray,
+                          y_lat: np.ndarray, **kwargs) -> "SurrogatePair":
+        """A pair pre-fitted on a previous run's profiled set — the
+        warm-start surrogate the online ``recompose`` screens candidate
+        seeds with before any fresh profiling."""
+        return cls(**kwargs).fit(B, y_acc, y_lat)
+
     def fit(self, B: np.ndarray, y_acc: np.ndarray, y_lat: np.ndarray
             ) -> "SurrogatePair":
         B = np.asarray(B, np.float64)

@@ -96,6 +96,14 @@ class EnsembleService:
             _make_member_fn(m.params, m.spec, impl) for m in self.members]
         self._bucket_cache: Optional[List[_Bucket]] = None
 
+    @classmethod
+    def for_selector(cls, pool: Sequence["ZooMember"],
+                     selector: np.ndarray, **kwargs) -> "EnsembleService":
+        """Service over the subset of ``pool`` a binary selector picks —
+        the control plane's staging constructor (swap.HotSwapper)."""
+        idx = np.flatnonzero(np.asarray(selector, bool))
+        return cls([pool[i] for i in idx], **kwargs)
+
     # ------------------------------------------------------------ plan
     @property
     def _buckets(self) -> List[_Bucket]:

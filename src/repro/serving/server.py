@@ -15,7 +15,6 @@ the examples exercise (real jitted inference, real clocks).
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
 import time
@@ -26,15 +25,43 @@ import numpy as np
 from repro.serving.queues import MicroBatcher
 
 
-@dataclasses.dataclass
 class ServerStats:
-    served: int = 0
-    slo_violations: int = 0
-    latencies: List[float] = dataclasses.field(default_factory=list)
+    """Thread-safe serving counters.  Worker threads ``record()``
+    retired queries concurrently with readers: every mutation holds the
+    internal lock, and ``p()``/``snapshot()`` copy the latency list
+    under it, so percentile reads are snapshot-consistent instead of
+    racing ongoing appends."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.served = 0
+        self.slo_violations = 0
+        self.shed = 0
+        self.latencies: List[float] = []
+
+    def record(self, latency: float, violated: bool) -> None:
+        with self._lock:
+            self.served += 1
+            self.latencies.append(latency)
+            if violated:
+                self.slo_violations += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    @property
+    def violation_rate(self) -> float:
+        with self._lock:
+            return self.slo_violations / self.served if self.served else 0.0
+
+    def snapshot(self) -> List[float]:
+        with self._lock:
+            return list(self.latencies)
 
     def p(self, pct: float) -> float:
-        return float(np.percentile(self.latencies, pct)) \
-            if self.latencies else 0.0
+        lat = self.snapshot()
+        return float(np.percentile(lat, pct)) if lat else 0.0
 
 
 class EnsembleServer:
@@ -52,7 +79,8 @@ class EnsembleServer:
                  max_queue: int = 1024,
                  batch_handler: Optional[
                      Callable[[Sequence[Dict]], List[float]]] = None,
-                 max_batch: int = 8, max_wait_ms: float = 2.0):
+                 max_batch: int = 8, max_wait_ms: float = 2.0,
+                 telemetry=None):
         assert handler is not None or batch_handler is not None
         self.handler = handler
         self.batch_handler = batch_handler
@@ -61,7 +89,9 @@ class EnsembleServer:
         self.batcher = MicroBatcher(max_batch=max_batch,
                                     max_wait_ms=max_wait_ms)
         self.stats = ServerStats()
-        self._lock = threading.Lock()
+        # control-plane tap (duck-typed control.telemetry.SloTelemetry):
+        # every ingest is an arrival, every retired query a latency sample
+        self.telemetry = telemetry
         self._stop = threading.Event()
         self._results: "queue.Queue" = queue.Queue()
         self._workers = [threading.Thread(target=self._run, daemon=True)
@@ -79,21 +109,24 @@ class EnsembleServer:
         t_window = t_window if t_window is not None else time.monotonic()
         try:
             self.q.put_nowait((patient, windows, t_window))
+            if self.telemetry is not None:
+                self.telemetry.record_arrival(t_window)
             return True
         except queue.Full:
+            self.stats.record_shed()
+            if self.telemetry is not None:
+                self.telemetry.record_shed(t_window)
             return False
 
     # ------------------------------------------------------------ workers
     def _retire(self, tasks: Sequence, scores: Sequence[float]) -> None:
         now = time.monotonic()
-        with self._lock:
-            for (patient, _w, t_window), score in zip(tasks, scores):
-                lat = now - t_window
-                self.stats.served += 1
-                self.stats.latencies.append(lat)
-                if lat > self.slo:
-                    self.stats.slo_violations += 1
-                self._results.put((patient, score, lat))
+        for (patient, _w, t_window), score in zip(tasks, scores):
+            lat = now - t_window
+            self.stats.record(lat, lat > self.slo)
+            if self.telemetry is not None:
+                self.telemetry.record_served(lat, now)
+            self._results.put((patient, score, lat))
         for _ in tasks:
             self.q.task_done()
 

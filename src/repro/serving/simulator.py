@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.serving.queues import TimestampedQueue
 
-SAMPLE, WINDOW, DEVICE_FREE, FLUSH = range(4)
+SAMPLE, WINDOW, DEVICE_FREE, FLUSH, CENSUS = range(5)
 
 
 @dataclasses.dataclass
@@ -34,6 +34,15 @@ class SimConfig:
     batch_period: float = 0.0         # >0 => offline batch mode (Fig. 9)
     dispatch_overhead: float = 0.0005
     seed: int = 0
+    # churn mode: piecewise-constant TARGET census [(t, n_active), ...].
+    # Overrides n_patients; admissions/discharges happen at each step
+    # (deterministic under seed: phases drawn in event order, discharges
+    # LIFO).  None => the original static-cohort behaviour, untouched.
+    census: Optional[Sequence[Tuple[float, int]]] = None
+    # scales admission phase jitter: 1.0 = phases uniform over a window
+    # (desynchronized beds), 0.0 = a step admission fires all its new
+    # patients' windows at the same instant (thundering-herd burst)
+    churn_phase_jitter: float = 1.0
 
 
 @dataclasses.dataclass
@@ -61,6 +70,12 @@ class SimResult:
     device_busy: float
     duration: float
     queue_stats: Dict[str, object]
+    # churn mode only: patient -> (t_admit, t_discharge, phase); the
+    # discharge time is +inf for patients active at the end of the run
+    patients: Dict[int, Tuple[float, float, float]] = \
+        dataclasses.field(default_factory=dict)
+    churn_log: List[Tuple[float, str, int]] = \
+        dataclasses.field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
         return np.asarray([q.latency for q in self.queries])
@@ -87,13 +102,47 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
     def push(t: float, kind: int, payload: tuple = ()):
         heapq.heappush(events, (t, next(counter), kind, payload))
 
-    # schedule per-patient window closures (random phase)
-    phases = rng.uniform(0, cfg.window_seconds, cfg.n_patients)
-    for p in range(cfg.n_patients):
-        t = phases[p] + cfg.window_seconds
-        while t <= cfg.duration_seconds:
-            push(t, WINDOW, (p,))
-            t += cfg.window_seconds
+    # -------------------------------------------------- patient cohort
+    churn = cfg.census is not None
+    active: set = set()
+    admit_t: Dict[int, float] = {}
+    discharge_t: Dict[int, float] = {}
+    phase_of: Dict[int, float] = {}
+    churn_log: List[Tuple[float, str, int]] = []
+    pid_counter = itertools.count()
+
+    def admit(now: float, k: int):
+        for _ in range(k):
+            p = next(pid_counter)
+            ph = float(rng.uniform(0, cfg.window_seconds)) \
+                * cfg.churn_phase_jitter
+            phase_of[p], admit_t[p] = ph, now
+            active.add(p)
+            churn_log.append((now, "admit", p))
+            t1 = now + ph + cfg.window_seconds
+            if t1 <= cfg.duration_seconds:
+                push(t1, WINDOW, (p,))
+
+    def discharge(now: float, k: int):
+        # LIFO (most recent admissions leave first): deterministic
+        for p in sorted(active, reverse=True)[:k]:
+            active.discard(p)
+            discharge_t[p] = now
+            churn_log.append((now, "discharge", p))
+
+    if churn:
+        # census steps drive admissions/discharges; windows are
+        # scheduled incrementally per active patient
+        for t_c, n_target in cfg.census:
+            push(t_c, CENSUS, (int(n_target),))
+    else:
+        # static cohort: schedule all window closures up front
+        phases = rng.uniform(0, cfg.window_seconds, cfg.n_patients)
+        for p in range(cfg.n_patients):
+            t = phases[p] + cfg.window_seconds
+            while t <= cfg.duration_seconds:
+                push(t, WINDOW, (p,))
+                t += cfg.window_seconds
     # batch mode: queries are held and flushed every batch_period
     if cfg.batch_period > 0:
         t = cfg.batch_period
@@ -131,7 +180,19 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
 
     while events:
         now, _, kind, payload = heapq.heappop(events)
-        if kind == WINDOW:
+        if kind == CENSUS:
+            target = payload[0]
+            if target > len(active):
+                admit(now, target - len(active))
+            elif target < len(active):
+                discharge(now, len(active) - target)
+        elif kind == WINDOW:
+            if churn:
+                p = payload[0]
+                if p not in active:
+                    continue              # discharged: window dropped
+                if now + cfg.window_seconds <= cfg.duration_seconds:
+                    push(now + cfg.window_seconds, WINDOW, (p,))
             rec = QueryRecord(patient=payload[0], t_window=now)
             if cfg.batch_period > 0:
                 held.append(rec)
@@ -151,6 +212,11 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
             free_devices += 1
             try_dispatch(now)
 
+    if churn:
+        ingest_events = int(sum(
+            (min(discharge_t.get(p, cfg.duration_seconds),
+                 cfg.duration_seconds) - t_a) / cfg.chunk_seconds
+            for p, t_a in admit_t.items()))
     done = [q for q in queries if q.t_done > 0]
     return SimResult(
         queries=done,
@@ -158,4 +224,7 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
         ingest_events=ingest_events,
         device_busy=device_busy,
         duration=cfg.duration_seconds,
-        queue_stats={"models": model_q.waits()})
+        queue_stats={"models": model_q.waits()},
+        patients={p: (t_a, discharge_t.get(p, float("inf")), phase_of[p])
+                  for p, t_a in admit_t.items()},
+        churn_log=churn_log)

@@ -1,0 +1,470 @@
+"""Online adaptive control plane: telemetry, controller policy,
+hot-swap correctness (zero dropped queries, bitwise post-swap
+equality), simulator churn determinism/conservation, the vectorized
+arrival curve, thread-safe ServerStats, and the incremental
+``recompose`` warm-start API."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control.controller import (AdaptiveController, ControllerConfig,
+                                      Decision)
+from repro.control.swap import HotSwapper, SelectorLadder, SwappableService
+from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+from repro.core.composer import ComposerParams, compose, recompose
+from repro.serving.latency import arrival_curve, queueing_bound
+from repro.serving.pipeline import EnsembleService
+from repro.serving.server import EnsembleServer, ServerStats
+from repro.serving.simulator import SimConfig, simulate
+
+from test_composer import make_testbed
+
+
+# ------------------------------------------------- vectorized alpha(dt)
+def _arrival_curve_ref(arrivals, dts):
+    a = np.sort(np.asarray(arrivals, np.float64))
+    out = []
+    for dt in dts:
+        best = 0
+        for i in range(len(a)):
+            best = max(best, int(np.sum((a >= a[i]) & (a < a[i] + dt))))
+        out.append(best)
+    return np.asarray(out, np.float64)
+
+
+def test_arrival_curve_matches_reference():
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 17, 60):
+        arr = rng.uniform(0, 10, n)
+        dts = np.concatenate([[0.0], rng.uniform(0, 12, 9)])
+        np.testing.assert_array_equal(arrival_curve(arr, dts),
+                                      _arrival_curve_ref(arr, dts))
+
+
+def test_arrival_curve_empty_trace():
+    dts = np.linspace(0, 5, 7)
+    out = arrival_curve(np.asarray([]), dts)
+    np.testing.assert_array_equal(out, np.zeros(7))
+
+
+# --------------------------------------------------------- ServerStats
+def test_server_stats_concurrent_record_and_read():
+    stats = ServerStats()
+    n_threads, per_thread = 8, 500
+    stop_reading = threading.Event()
+
+    def writer():
+        for i in range(per_thread):
+            stats.record(0.001 * i, i % 10 == 0)
+
+    def reader():
+        while not stop_reading.is_set():
+            stats.p(99)                       # must never crash mid-append
+            _ = stats.violation_rate
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = [threading.Thread(target=writer) for _ in range(n_threads)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop_reading.set()
+    for t in readers:
+        t.join()
+    assert stats.served == n_threads * per_thread
+    assert len(stats.latencies) == n_threads * per_thread
+    assert stats.slo_violations == n_threads * (per_thread // 10)
+
+
+def test_server_stats_shed_counter():
+    srv = EnsembleServer(handler=lambda w: 0.0, max_queue=1)
+    # not started: first submit fills the queue, second is shed
+    assert srv.submit(0, {})
+    assert not srv.submit(1, {})
+    assert srv.stats.shed == 1
+
+
+# ----------------------------------------------------------- telemetry
+def test_telemetry_sliding_window_and_rates():
+    t = [0.0]
+    tel = SloTelemetry(slo_seconds=0.5, window_seconds=10.0,
+                      clock=lambda: t[0])
+    for k in range(20):                       # one arrival per second
+        tel.record_arrival(float(k))
+        tel.record_served(0.1 if k < 18 else 0.9, float(k))
+    t[0] = 20.0
+    snap = tel.snapshot()
+    assert snap.n_arrivals == 9               # (10, 20] survive the window
+    assert snap.arrival_rate == pytest.approx(0.9)
+    assert snap.n_served == 9
+    assert snap.violation_rate == pytest.approx(2 / 9)  # k=18,19 > SLO
+    assert snap.p50 == pytest.approx(0.1)
+    assert snap.p99 >= 0.5
+
+
+def test_telemetry_online_arrival_curve_and_tq():
+    tel = SloTelemetry(window_seconds=100.0, clock=lambda: 50.0)
+    rng = np.random.default_rng(0)
+    arr = np.sort(rng.uniform(0, 50, 40))
+    for a in arr:
+        tel.record_arrival(float(a))
+    dts = np.linspace(0, 10, 5)
+    np.testing.assert_array_equal(tel.arrival_curve(dts),
+                                  arrival_curve(arr, dts))
+    assert tel.queueing_bound(mu=4.0, T0=0.05) == pytest.approx(
+        queueing_bound(arr, 4.0, 0.05))
+    snap = tel.snapshot(mu=4.0, ts=0.05)
+    assert snap.predicted_latency == pytest.approx(
+        0.05 + queueing_bound(arr, 4.0, 0.0))
+
+
+def test_telemetry_threaded_feed():
+    tel = SloTelemetry(window_seconds=60.0)
+    def feed():
+        for _ in range(200):
+            tel.record_arrival()
+            tel.record_served(0.01)
+    threads = [threading.Thread(target=feed) for _ in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    snap = tel.snapshot()
+    assert snap.n_arrivals == 800 and snap.n_served == 800
+
+
+def test_server_telemetry_tap():
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=60.0)
+    srv = EnsembleServer(handler=lambda w: 1.0, n_workers=1,
+                         telemetry=tel).start()
+    for i in range(6):
+        srv.submit(i, {})
+    srv.stop()
+    snap = tel.snapshot()
+    assert snap.n_arrivals == 6
+    assert snap.n_served == 6
+
+
+# ---------------------------------------------------- ladder + facade
+class _NoopLadder(SelectorLadder):
+    def __init__(self, sel):
+        super().__init__(sel)
+        self.activations = []
+
+    def _activate(self, selector):
+        self.activations.append(selector.copy())
+
+
+def _sel(n, idx):
+    b = np.zeros(n, np.int8)
+    b[list(idx)] = 1
+    return b
+
+
+def test_ladder_shed_climb_bounds():
+    rungs = [_sel(6, [0]), _sel(6, [0, 1]), _sel(6, [0, 1, 2])]
+    lad = _NoopLadder(rungs[2])
+    lad.set_ladder(rungs)
+    assert lad.ladder_pos == 2
+    assert not lad.can_climb() and lad.can_shed()
+    assert lad.climb() is False
+    assert lad.shed() and lad.ladder_pos == 1
+    assert lad.shed() and lad.ladder_pos == 0
+    assert lad.shed() is False                # floor
+    assert lad.climb() and lad.ladder_pos == 1
+    assert len(lad.activations) == 3
+
+
+def test_ladder_off_ladder_swap():
+    lad = _NoopLadder(_sel(6, [0]))
+    lad.set_ladder([_sel(6, [0]), _sel(6, [0, 1])])
+    lad.swap_to(_sel(6, [3, 4]))              # not a rung
+    assert lad.ladder_pos == -1
+    assert not lad.can_shed() and not lad.can_climb()
+    np.testing.assert_array_equal(lad.active_selector, _sel(6, [3, 4]))
+
+
+def test_swappable_service_atomic():
+    class Stub:
+        def __init__(self, v):
+            self.v = v
+
+        def predict_batch(self, batch):
+            return [self.v] * len(batch)
+
+    fac = SwappableService(Stub(1.0))
+    assert fac.predict_batch([{}]) == [1.0]
+    old = fac.swap(Stub(2.0))
+    assert old.v == 1.0
+    assert fac.predict_batch([{}]) == [2.0]
+    assert fac.swap_count == 1
+
+
+# ------------------------------------------------- hot-swap correctness
+def test_hot_swap_zero_drop_and_bitwise_equal(zoo_members, rng):
+    """Swapping selectors mid-stream must drop zero queries, and every
+    post-swap prediction must be bitwise-equal to a cold-started
+    service with the new selector."""
+    n = len(zoo_members)
+    sel_a = _sel(n, range(0, n, 2))
+    sel_b = _sel(n, range(1, n, 2))
+    swapper = HotSwapper(zoo_members, sel_a, warmup_batch_sizes=(1,))
+    swapper.stage(sel_b)
+    # max_batch=1 => every flush is a singleton, so server scores are
+    # comparable 1:1 against cold predict_batch([w])
+    srv = EnsembleServer(batch_handler=swapper.facade.predict_batch,
+                         n_workers=2, max_batch=1,
+                         max_wait_ms=0.5).start()
+    windows = [{"ecg": rng.standard_normal((3, 250)).astype(np.float32)}
+               for _ in range(24)]
+    for i in range(12):
+        assert srv.submit(i, windows[i])
+    swapper.swap_to(sel_b)                    # mid-stream
+    for i in range(12, 24):
+        assert srv.submit(i, windows[i])
+    stats = srv.stop()
+    assert stats.served == 24                 # zero dropped
+    scores = {p: s for p, s, _ in srv.results()}
+    cold = EnsembleService.for_selector(zoo_members, sel_b)
+    for i in range(12, 24):
+        assert scores[i] == cold.predict_batch([windows[i]])[0]
+
+
+def test_hot_swap_facade_batch_bitwise(zoo_members, rng):
+    """Direct facade flushes after a swap are bitwise-identical to a
+    cold-started service on the same batch."""
+    n = len(zoo_members)
+    swapper = HotSwapper(zoo_members, _sel(n, [0, 1]),
+                         warmup_batch_sizes=(1,))
+    batch = [{"ecg": rng.standard_normal((3, 250)).astype(np.float32)}
+             for _ in range(5)]
+    swapper.swap_to(_sel(n, [2, 5, 8]))
+    got = swapper.facade.predict_batch(batch)
+    cold = EnsembleService.for_selector(zoo_members, _sel(n, [2, 5, 8]))
+    assert got == cold.predict_batch(batch)
+
+
+def test_hot_swap_staging_cached(zoo_members):
+    n = len(zoo_members)
+    swapper = HotSwapper(zoo_members, _sel(n, [0]),
+                         warmup_batch_sizes=(1,))
+    svc1 = swapper.stage(_sel(n, [1, 2]))
+    svc2 = swapper.stage(_sel(n, [1, 2]))
+    assert svc1 is svc2
+    swapper.swap_to(_sel(n, [1, 2]))
+    assert swapper.facade.current is svc1     # swap reuses the staged one
+
+
+# ----------------------------------------------------- controller policy
+def _snap(**kw):
+    base = dict(t=0.0, window_seconds=30.0, n_arrivals=100, n_served=100,
+                n_shed=0, arrival_rate=2.0, p50=0.1, p99=0.2,
+                violation_rate=0.0)
+    base.update(kw)
+    return TelemetrySnapshot(**base)
+
+
+def _controller(ladder_pos="top", **cfg):
+    rungs = [_sel(4, [0]), _sel(4, [0, 1]), _sel(4, [0, 1, 2])]
+    lad = _NoopLadder(rungs[-1 if ladder_pos == "top" else 0])
+    lad.set_ladder(rungs)
+    tel = SloTelemetry()
+    conf = ControllerConfig(**{"slo_seconds": 1.0, "cooldown_seconds": 0.0,
+                               **cfg})
+    return AdaptiveController(tel, lad, config=conf, sync=True), lad
+
+
+def test_decide_holds_without_samples():
+    ctl, _ = _controller()
+    assert ctl.decide(_snap(n_served=3)) is Decision.HOLD
+
+
+def test_decide_sheds_on_violations():
+    ctl, _ = _controller()
+    assert ctl.decide(_snap(violation_rate=0.5)) is Decision.SHED
+    assert ctl.decide(_snap(p99=1.4)) is Decision.SHED
+    assert ctl.decide(_snap(n_shed=5)) is Decision.SHED
+
+
+def test_decide_recomposes_when_cannot_shed():
+    ctl, _ = _controller(ladder_pos="bottom")
+    assert ctl.decide(_snap(violation_rate=0.5)) is Decision.RECOMPOSE
+
+
+def test_decide_recomposes_on_drift_and_predicted_risk():
+    ctl, _ = _controller()
+    ctl.baseline_rate = 2.0
+    assert ctl.decide(_snap(arrival_rate=4.0)) is Decision.RECOMPOSE
+    assert ctl.decide(_snap(arrival_rate=1.0)) is Decision.RECOMPOSE
+    ctl.baseline_rate = None
+    assert ctl.decide(_snap(ts=0.3, tq_bound=1.1)) is Decision.RECOMPOSE
+
+
+def test_decide_climbs_only_with_headroom():
+    ctl, _ = _controller(ladder_pos="bottom")
+    assert ctl.decide(_snap(p99=0.2)) is Decision.CLIMB
+    assert ctl.decide(_snap(p99=0.8)) is Decision.HOLD     # no headroom
+    ctl_top, _ = _controller(ladder_pos="top")
+    assert ctl_top.decide(_snap(p99=0.2)) is Decision.HOLD  # at the top
+
+
+def test_controller_step_acts_and_cools_down():
+    calls = []
+    rungs = [_sel(4, [0]), _sel(4, [0, 1, 2])]
+    lad = _NoopLadder(rungs[-1])
+    lad.set_ladder(rungs)
+    t = [100.0]
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=30.0,
+                      clock=lambda: t[0])
+    for k in range(40):
+        tel.record_arrival(80.0 + k / 2)
+        tel.record_served(2.0, 80.0 + k / 2)  # everything violates
+    ctl = AdaptiveController(
+        tel, lad, recompose_fn=lambda s: calls.append(s) or rungs[0],
+        config=ControllerConfig(slo_seconds=1.0, cooldown_seconds=30.0),
+        sync=True, clock=lambda: t[0])
+    assert ctl.step() is Decision.SHED
+    assert lad.ladder_pos == 0                # shed to the cheap rung
+    assert len(calls) == 1                    # recompose kicked off too
+    assert ctl.step() is Decision.HOLD        # cooldown gates the next one
+    t[0] = 140.0
+    for k in range(60):                       # healthy, same 2/s rate as
+        tel.record_served(0.1, 120.0 + k / 3)  # the baseline (no drift)
+        tel.record_arrival(120.0 + k / 3)
+    assert ctl.step() is Decision.CLIMB
+    assert lad.ladder_pos == 1
+
+
+def test_controller_async_recompose_swaps():
+    rungs = [_sel(4, [0]), _sel(4, [0, 1])]
+    lad = _NoopLadder(rungs[1])
+    lad.set_ladder(rungs)
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=30.0)
+    done = threading.Event()
+
+    def slow_recompose(snap):
+        done.wait(2.0)
+        return _sel(4, [2, 3])
+
+    ctl = AdaptiveController(tel, lad, recompose_fn=slow_recompose,
+                             config=ControllerConfig(cooldown_seconds=0.0,
+                                                     min_samples=0),
+                             sync=False)
+    ctl.baseline_rate = 1.0
+    now = time.monotonic()
+    for k in range(30):
+        tel.record_arrival(now - k * 0.1)
+    ctl.step()                                # drift -> async recompose
+    assert ctl._recomposing.is_set()
+    done.set()
+    ctl.join_recompose(5.0)
+    np.testing.assert_array_equal(lad.active_selector, _sel(4, [2, 3]))
+    assert ctl.n_recomposes == 1
+
+
+# ----------------------------------------------------------- recompose
+def test_recompose_warm_start_reuses_accuracy():
+    n, f_a, f_l, lat, _, _ = make_testbed(seed=1)
+    res0 = compose(n, f_a, f_l, 0.2,
+                   ComposerParams(N=6, M=60, K=4, N0=8, seed=1))
+    new_calls = [0]
+
+    def f_a_counting(b):
+        new_calls[0] += 1
+        return f_a(b)
+
+    def f_l_doubled(b):                       # load doubled: 2x latency
+        return 2.0 * f_l(b)
+
+    res1 = recompose(f_a_counting, f_l_doubled, 0.2, warm_start=res0,
+                     params=ComposerParams(N=4, M=60, K=4, N0=8, seed=1))
+    assert res1.feasible
+    assert res1.latency <= 0.2 + 1e-9
+    assert f_l_doubled(res1.b_star) == pytest.approx(res1.latency)
+    # the memo table absorbed previously profiled selectors: strictly
+    # fewer fresh accuracy calls than profiler calls
+    assert new_calls[0] < res1.n_profiler_calls
+    assert res1.accuracy > 0.5
+
+
+def test_recompose_keeps_incumbent_when_still_optimal():
+    n, f_a, f_l, *_ = make_testbed(seed=2)
+    res0 = compose(n, f_a, f_l, 0.2,
+                   ComposerParams(N=8, M=80, K=6, N0=10, seed=2))
+    res1 = recompose(f_a, f_l, 0.2, warm_start=res0,
+                     params=ComposerParams(N=3, M=60, K=4, N0=8, seed=2))
+    # same load, same budget: the incumbent is a seed, so the result
+    # can only match or beat it
+    assert res1.accuracy >= res0.accuracy - 1e-9
+
+
+# ------------------------------------------------------ simulator churn
+def test_churn_deterministic_under_seed():
+    cfg = SimConfig(window_seconds=10.0, duration_seconds=80.0,
+                    census=[(0.0, 8), (40.0, 16), (60.0, 4)], seed=5)
+    r1, r2 = simulate([0.01], cfg), simulate([0.01], cfg)
+    np.testing.assert_array_equal(r1.arrivals, r2.arrivals)
+    assert r1.churn_log == r2.churn_log
+
+
+def test_churn_conserves_query_counts():
+    cfg = SimConfig(window_seconds=10.0, duration_seconds=100.0,
+                    census=[(0.0, 10), (30.0, 25), (70.0, 5)], seed=7)
+    r = simulate([0.01], cfg)
+    counts = {}
+    for q in r.queries:
+        counts[q.patient] = counts.get(q.patient, 0) + 1
+    total = 0
+    for p, (t_a, t_d, ph) in r.patients.items():
+        exp, k = 0, 1
+        while True:
+            t = t_a + ph + k * cfg.window_seconds
+            if t > cfg.duration_seconds or t >= t_d:
+                break
+            exp, k = exp + 1, k + 1
+        assert counts.get(p, 0) == exp
+        total += exp
+    assert total == len(r.arrivals) == len(r.queries)
+
+
+def test_churn_census_step_scales_arrival_rate():
+    cfg = SimConfig(window_seconds=10.0, duration_seconds=120.0,
+                    census=[(0.0, 10), (60.0, 30)], seed=3)
+    r = simulate([0.005], cfg)
+    first = np.sum((r.arrivals >= 20) & (r.arrivals < 60))
+    second = np.sum(r.arrivals >= 80)
+    # 3x census => ~3x arrivals per unit time (same 40 s spans)
+    assert second > 2 * first
+
+
+def test_churn_burst_admissions_synchronized():
+    cfg = SimConfig(window_seconds=10.0, duration_seconds=40.0,
+                    census=[(0.0, 6)], churn_phase_jitter=0.0, seed=0)
+    r = simulate([0.002], cfg)
+    _, cnt = np.unique(r.arrivals, return_counts=True)
+    assert cnt.max() == 6                     # thundering herd
+
+
+def test_default_path_has_no_churn_bookkeeping():
+    r = simulate([0.01], SimConfig(n_patients=4, duration_seconds=40.0,
+                                   window_seconds=10.0))
+    assert r.patients == {} and r.churn_log == []
+
+
+# ------------------------------------------------- adaptive end-to-end
+def test_adaptive_beats_static_under_spike():
+    """Acceptance: under a census spike the controller recomposes/sheds
+    and keeps p99 under the SLO where the static ensemble violates."""
+    from benchmarks.adaptive_bench import run_adaptive_sim, \
+        synthetic_testbed
+    zoo, costs, f_a = synthetic_testbed(seed=0)
+    common = dict(zoo=zoo, costs=costs, f_a=f_a, slo=1.0,
+                  schedule=[(2, 24), (3, 72)], seed=0)
+    static = run_adaptive_sim(adaptive=False, **common)
+    adaptive = run_adaptive_sim(adaptive=True, **common)
+    assert static["epochs"][-1]["p99_s"] > 1.0         # static violates
+    assert adaptive["epochs"][-1]["p99_s"] <= 1.0      # adaptive doesn't
+    assert adaptive["violation_rate"] < static["violation_rate"]
+    assert len(adaptive["actions"]) >= 1
