@@ -34,6 +34,7 @@ from repro.core.bagging import roc_auc
 from repro.core.composer import ComposerParams, compose, recompose
 from repro.core.profiles import ModelProfile, ModelZoo, SystemConfig
 from repro.serving.latency import LatencyProfiler
+from repro.serving.placement import lpt_placement
 from repro.serving.simulator import SimConfig, simulate
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -142,7 +143,11 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
         c = costs[swapper.active_selector.astype(bool)]
         if not len(c):
             return float("inf"), 0.0
-        return n_devices / float(c.sum()), float(c.max())
+        # Ts is the slowest device's total work under the LPT plan —
+        # the same per-device-makespan model serving_latency uses — not
+        # the single heaviest member
+        pl = lpt_placement(list(c), n_devices)
+        return n_devices / float(c.sum()), pl.makespan, pl.imbalance
 
     ctl = AdaptiveController(
         telemetry, swapper, recompose_fn=recompose_fn,
@@ -151,28 +156,42 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
         service_profile_fn=profile_fn, sync=True)
 
     records: List[Dict] = []
+    carry = np.asarray([])                # unfinished-query backlog
     for e, census in enumerate(epochs):
         sel = swapper.active_selector.copy()
         c_sel = list(costs[sel.astype(bool)])
         r = simulate(c_sel, SimConfig(
             n_patients=census, n_devices=n_devices,
             window_seconds=window_seconds,
-            duration_seconds=epoch_seconds, seed=seed + 17 * e))
+            duration_seconds=epoch_seconds, seed=seed + 17 * e,
+            carry_backlog=True), backlog=carry)
         t0 = e * epoch_seconds
         if adaptive:                          # static arm has no reader
             for q in r.queries:
-                telemetry.record_arrival(t0 + q.t_window)
+                if q.t_window >= 0:    # backlog arrivals were recorded
+                    telemetry.record_arrival(t0 + q.t_window)
                 telemetry.record_served(
                     q.latency, t0 + min(q.t_done, epoch_seconds))
+            for age in r.backlog:      # born here, served next epoch
+                # age > epoch_seconds means the query was carried IN
+                # (born in an earlier epoch, arrival already recorded)
+                if age <= epoch_seconds:
+                    telemetry.record_arrival(t0 + epoch_seconds - age)
         lat = r.latencies()
         rec = {"epoch": e, "t0_s": t0, "census": census,
                "selector": np.flatnonzero(sel).tolist(),
                "n_members": int(sel.sum()),
                "accuracy": float(f_a(sel)),
                "served": len(r.queries),
+               "backlog_in": len(carry),
+               "backlog_out": len(r.backlog),
+               # births this epoch: everything retired or carried out,
+               # minus what was carried in — the conservation identity
+               "born": len(r.queries) + len(r.backlog) - len(carry),
                "p50_s": r.p(50), "p99_s": r.p(99),
                "violation_rate": float(np.mean(lat > slo))
                if len(lat) else 0.0}
+        carry = r.backlog
         if adaptive:
             rec["decision"] = ctl.step(now=(e + 1) * epoch_seconds).value
         records.append(rec)
@@ -180,7 +199,8 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
             print(f"  [{'adpt' if adaptive else 'stat'}] epoch {e} "
                   f"census {census:3d} members {rec['n_members']:2d} "
                   f"acc {rec['accuracy']:.3f} p99 {rec['p99_s']:7.3f}s "
-                  f"viol {rec['violation_rate']:.2f}"
+                  f"viol {rec['violation_rate']:.2f} "
+                  f"backlog {rec['backlog_out']:3d}"
                   + (f" -> {rec.get('decision', '')}" if adaptive else ""))
 
     served = sum(r["served"] for r in records)
@@ -196,7 +216,10 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
             "spike_start_epoch": spike_start,
             "initial_selector": np.flatnonzero(res0.b_star).tolist(),
             "actions": [(t, d.value) for t, d in ctl.log],
-            "n_recomposes": ctl.n_recomposes}
+            "n_recomposes": ctl.n_recomposes,
+            "served_total": served,
+            "born_total": sum(r["born"] for r in records),
+            "final_backlog": len(carry)}
 
 
 def wallclock_hot_swap(n_queries: int = 48, n_swaps: int = 3,

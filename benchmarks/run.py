@@ -76,6 +76,15 @@ def main(argv=None) -> None:
               reps=3 if args.quick else 10,
               write_json=not args.quick),
           lambda t: f"speedup={t['speedup_fused_microbatch']:.2f}x")
+    # multi-device placement sweep: degrades to whatever device count
+    # this process was launched with (run serving_bench.py standalone,
+    # or under the CI lane's XLA_FLAGS, for the full 8-device sweep)
+    bench("placement_sweep",
+          lambda: serving_bench.bench_placement_sweep(
+              reps=3 if args.quick else 5,
+              write_json=not args.quick),
+          lambda t: "makespan_min="
+          + f"{min(v['makespan_s'] for v in t['sweep'].values()) * 1e3:.1f}ms")
     # adaptive control plane: static-vs-adaptive under a census spike
     # (quick mode keeps the noisy numbers out of the tracked JSON)
     from benchmarks.adaptive_bench import bench_adaptive

@@ -1,8 +1,14 @@
 """Fig. 9 / Fig. 10 / Fig. 13: serving-system benchmarks on the DES
 (deterministic stand-in for the paper's HTTP/RPC testbed) plus real
-wall-clock jitted-inference costs measured on this machine, and the
-fused-serving before/after microbench (``bench_fused_serving``) whose
-trajectory is tracked in ``BENCH_serving.json``.
+wall-clock jitted-inference costs measured on this machine, the
+fused-serving before/after microbench (``bench_fused_serving``), and
+the multi-device placement sweep (``bench_placement_sweep``) — both
+tracked in ``BENCH_serving.json``.
+
+The placement sweep needs forced host devices; run it standalone as
+``python benchmarks/serving_bench.py`` (which sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before jax
+initialises) or under the CI multi-device lane's env.
 """
 from __future__ import annotations
 
@@ -18,6 +24,18 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
 
 from repro.serving.latency import LatencyProfiler, queueing_bound
 from repro.serving.simulator import SimConfig, simulate
+
+
+def _merge_bench_json(updates: Dict) -> None:
+    """Update BENCH_serving.json in place: each bench owns its keys and
+    must not clobber the others' tracked trajectories."""
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            merged = json.load(f)
+    merged.update(updates)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
 
 
 def bench_fig9(model_cost: float = 0.02, batch_period: float = 3600.0,
@@ -174,8 +192,90 @@ def bench_fused_serving(n_patients: int = 16, reps: int = 10,
         print(f"  speedup (fused+microbatch vs per-member): "
               f"{out['speedup_fused_microbatch']:.2f}x")
     if write_json:
-        with open(BENCH_JSON, "w") as f:
-            json.dump(out, f, indent=2)
+        _merge_bench_json(out)
+    return out
+
+
+def bench_placement_sweep(device_counts=(1, 2, 4, 8),
+                          n_patients: int = 16, reps: int = 5,
+                          input_len: int = 750, verbose=True,
+                          write_json: bool = True) -> Dict:
+    """Sharded-vs-unsharded serving on the reduced zoo: for each device
+    count, LPT-place the measured bucket costs, run the sharded
+    ``predict_batch`` hot path, and record
+
+    * ``makespan_s``     — the plan's per-query service latency model
+                           (slowest device's bucket-cost total), which
+                           must fall strictly below
+    * ``serial_s``       — the unsharded sum-of-buckets cost, for every
+                           sweep point with >= 2 devices;
+    * wall-clock per-query latency and shard/dispatch counts.
+
+    Merged into ``BENCH_serving.json`` under ``"placement_sweep"`` so
+    the multi-device trajectory is tracked alongside the fused-serving
+    numbers."""
+    import jax
+    from repro.configs.ecg_zoo import zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.pipeline import EnsembleService, ZooMember
+
+    avail = jax.device_count()
+    device_counts = [d for d in device_counts if d <= avail]
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    windows = [{"ecg": rng.standard_normal((3, input_len))
+                .astype(np.float32)} for _ in range(n_patients)]
+
+    base = EnsembleService(members)
+    bucket_costs = base.measured_bucket_costs(reps=reps,
+                                              batch=n_patients)
+    serial = float(sum(bucket_costs))
+    out: Dict = {"n_devices_available": avail,
+                 "n_patients": n_patients, "reps": reps,
+                 "input_len": input_len,
+                 "bucket_costs_ms": [c * 1e3 for c in bucket_costs],
+                 "serial_s": serial, "sweep": {}}
+    if verbose:
+        print(f"\nplacement sweep (reduced zoo, {avail} host devices, "
+              f"serial sum-of-buckets {serial * 1e3:.1f} ms):")
+    for d in device_counts:
+        pl = base.plan_placement(d, bucket_costs=bucket_costs)
+        svc = EnsembleService(members, placement=pl,
+                              devices=jax.devices()[:d])
+        svc.predict_batch(windows)                 # warmup/compile
+        d0 = svc.dispatch_count
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            svc.predict_batch(windows)
+        dt = time.perf_counter() - t0
+        n_q = reps * n_patients
+        rec = {"makespan_s": pl.makespan,
+               "imbalance": pl.imbalance,
+               "n_shards": svc.n_buckets,
+               "per_query_ms": dt / n_q * 1e3,
+               "dispatches_per_query":
+                   (svc.dispatch_count - d0) / n_q,
+               # relative epsilon: at 1 device makespan == serial up to
+               # float summation order, which must not read as "below"
+               "makespan_below_serial":
+                   bool(pl.makespan < serial * (1.0 - 1e-9))}
+        out["sweep"][d] = rec
+        if verbose:
+            print(f"  {d} devices: makespan {pl.makespan * 1e3:6.1f} ms"
+                  f" (imb {pl.imbalance:.2f}, {rec['n_shards']} shards)"
+                  f"  wall {rec['per_query_ms']:6.2f} ms/query"
+                  f"  {'<' if rec['makespan_below_serial'] else '>='}"
+                  f" serial")
+    # never clobber a tracked multi-device trajectory with a degenerate
+    # sweep: a process launched without forced devices only covers d=1
+    if write_json and len(device_counts) > 1:
+        _merge_bench_json({"placement_sweep": out})
+    elif write_json and verbose:
+        print("  (single-device process: sweep NOT written to "
+              "BENCH_serving.json — run benchmarks/serving_bench.py "
+              "standalone for the tracked 8-device sweep)")
     return out
 
 
@@ -197,3 +297,12 @@ def bench_measured_costs(verbose=True) -> Dict:
         for k, v in out.items():
             print(f"  {k}: {v * 1000:.2f} ms/query")
     return out
+
+
+if __name__ == "__main__":
+    # standalone entry point for the multi-device sweep: the flag must
+    # land before jax initialises (jax is imported lazily above)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    bench_fused_serving()
+    bench_placement_sweep()

@@ -1,17 +1,25 @@
 """The adaptive controller: telemetry -> decision -> actuation.
 
 One control iteration (``step``) reads a consistent telemetry snapshot
-and picks one of four actions:
+and picks one of five actions:
 
 * ``SHED``      — SLO is being violated NOW (violation rate above the
                   high-water mark, or observed p99 over the SLO): step
                   down the degradation ladder immediately (a pre-staged
                   pointer flip), and kick off a background recompose to
                   find the best ensemble for the new load;
+* ``REPLACE``   — the live device placement is lopsided (bucket-load
+                  imbalance over ``imbalance_high``) while the ensemble
+                  itself is fine: re-derive the LPT plan from freshly
+                  measured bucket costs and hot-swap the SAME selector
+                  onto the new shards (``HotSwapper.re_place``) — far
+                  cheaper than a recompose, so it is tried first;
 * ``RECOMPOSE`` — predicted SLO risk (online network-calculus
                   T_s + T_q crossing the SLO) or arrival-rate drift
                   beyond the trigger factor: re-run the composer
-                  warm-started from the incumbent, then hot-swap;
+                  warm-started from the incumbent, then hot-swap (a
+                  recompose also re-derives the placement — selector
+                  AND placement are the actuated state);
 * ``CLIMB``     — healthy with headroom (violations under the
                   low-water mark and p99 under ``headroom_frac`` of the
                   SLO): step back up the ladder;
@@ -35,6 +43,7 @@ import numpy as np
 
 from repro.control.swap import SelectorLadder
 from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+from repro.serving.placement import placement_signature
 
 
 class Decision(enum.Enum):
@@ -42,6 +51,7 @@ class Decision(enum.Enum):
     SHED = "shed"
     CLIMB = "climb"
     RECOMPOSE = "recompose"
+    REPLACE = "replace"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +66,10 @@ class ControllerConfig:
     # treating it as risk, so a persistently tight bound cannot thrash
     # the composer while observed latency is healthy
     predicted_factor: float = 1.2
+    # device-load imbalance (max/mean bucket load of the live placement)
+    # above this triggers a RE-PLACE: the makespan is reducible without
+    # touching the ensemble, so it pre-empts the costlier recompose
+    imbalance_high: float = 1.25
     cooldown_seconds: float = 10.0
     min_samples: int = 20          # served samples needed to act
 
@@ -70,11 +84,21 @@ class AdaptiveController:
                      Callable[[], Tuple[float, float]]] = None,
                  sync: bool = False,
                  clock: Callable[[], float] = time.monotonic):
-        """``service_profile_fn`` returns (mu, T_s) of the ACTIVE
-        ensemble so snapshots carry the online T_q bound."""
+        """``service_profile_fn`` returns (mu, T_s) — optionally
+        (mu, T_s, placement_imbalance) — of the ACTIVE ensemble so
+        snapshots carry the online T_q bound and the live device-load
+        balance."""
         self.telemetry = telemetry
         self.swapper = swapper
         self.recompose_fn = recompose_fn
+        # placement is actuatable only when the swapper exposes the
+        # RE-PLACE actuator (HotSwapper does; plain ladders do not)
+        self._can_replace = callable(getattr(swapper, "re_place", None))
+        # signature of a plan a RE-PLACE failed to improve: while the
+        # active placement still matches it, the imbalance is inherent
+        # (LPT cannot do better), so REPLACE must stand aside instead
+        # of re-measuring every step and starving recompose/climb
+        self._replace_noop_sig: Optional[bytes] = None
         if config is None:
             config = ControllerConfig(slo_seconds=telemetry.slo)
         elif abs(config.slo_seconds - telemetry.slo) > 1e-12:
@@ -94,8 +118,14 @@ class AdaptiveController:
         self._last_action_t = -float("inf")
         self._recomposing = threading.Event()
         self._recompose_thread: Optional[threading.Thread] = None
+        self._replacing = threading.Event()
+        self._replace_thread: Optional[threading.Thread] = None
         self._monitor: Optional[threading.Thread] = None
         self._stop = threading.Event()
+
+    def _active_placement_sig(self) -> Optional[bytes]:
+        return placement_signature(
+            getattr(self.swapper, "active_placement", None))
 
     # ---------------------------------------------------------- policy
     def decide(self, snap: TelemetrySnapshot) -> Decision:
@@ -107,6 +137,11 @@ class AdaptiveController:
                 or snap.p99 > c.slo_seconds or snap.n_shed > 0):
             return Decision.SHED if self.swapper.can_shed() \
                 else Decision.RECOMPOSE
+        if self._can_replace \
+                and np.isfinite(snap.placement_imbalance) \
+                and snap.placement_imbalance > c.imbalance_high \
+                and self._active_placement_sig() != self._replace_noop_sig:
+            return Decision.REPLACE        # rebalance before re-search
         if np.isfinite(snap.predicted_latency) \
                 and snap.predicted_latency > c.predicted_factor \
                 * c.slo_seconds:
@@ -123,9 +158,12 @@ class AdaptiveController:
 
     # ------------------------------------------------------------- act
     def snapshot(self, now: Optional[float] = None) -> TelemetrySnapshot:
-        mu = ts = None
+        mu = ts = imbalance = None
         if self.service_profile_fn is not None:
-            mu, ts = self.service_profile_fn()
+            profile = self.service_profile_fn()
+            mu, ts = profile[0], profile[1]
+            if len(profile) > 2:           # (mu, Ts, imbalance) profile
+                imbalance = profile[2]
         # evidence must postdate the last actuation: the violation burst
         # that justified a shed stays in the sliding window for up to
         # window_seconds and must not re-trigger a shed per cooldown,
@@ -133,7 +171,7 @@ class AdaptiveController:
         since = self._last_action_t \
             if np.isfinite(self._last_action_t) else None
         return self.telemetry.snapshot(mu=mu, ts=ts or 0.0, now=now,
-                                       since=since)
+                                       since=since, imbalance=imbalance)
 
     def step(self, now: Optional[float] = None) -> Decision:
         """One control iteration: snapshot, decide, act."""
@@ -153,6 +191,8 @@ class AdaptiveController:
             acted = self.swapper.climb()
         elif decision is Decision.RECOMPOSE:
             acted = self._launch_recompose(snap)
+        elif decision is Decision.REPLACE:
+            acted = self._launch_replace()
         if not acted:
             # nothing actually changed (rung race, recompose already in
             # flight): don't log a phantom action or start a cooldown
@@ -161,6 +201,42 @@ class AdaptiveController:
         self._last_action_t = now
         self.log.append((now, decision))
         return decision
+
+    def _launch_replace(self) -> bool:
+        """RE-PLACE: fresh costs -> fresh LPT plan -> hot-swap the same
+        selector onto the new shards.  Like recompose, the expensive
+        measure+stage runs in a daemon thread (``sync=False``) so the
+        monitor loop stays free to SHED mid-rebalance; ``sync=True``
+        actuates inline and returns whether the plan actually changed
+        (a no-op must not start a cooldown).
+
+        A plan re_place could not improve is remembered by signature so
+        REPLACE is not re-tried (re-measuring every step would starve
+        recompose/climb) until the placement changes some other way —
+        unless the signature moved underneath (re_place lost a race to
+        a selector swap), in which case the never-tried new placement
+        must not inherit the no-op brand."""
+        if self._replacing.is_set():
+            return False
+        self._replacing.set()
+        sig_before = self._active_placement_sig()
+
+        def run() -> bool:
+            try:
+                acted = self.swapper.re_place()
+                self._replace_noop_sig = sig_before \
+                    if not acted \
+                    and self._active_placement_sig() == sig_before \
+                    else None
+                return acted
+            finally:
+                self._replacing.clear()
+
+        if self.sync:
+            return run()
+        self._replace_thread = threading.Thread(target=run, daemon=True)
+        self._replace_thread.start()
+        return True
 
     def _launch_recompose(self, snap: TelemetrySnapshot) -> bool:
         """Returns True iff a recompose was actually started."""
@@ -187,10 +263,22 @@ class AdaptiveController:
         selector = self.recompose_fn(snap)
         self.n_recomposes += 1
         self.baseline_rate = snap.arrival_rate or self.baseline_rate
+        sharded = self._can_replace and getattr(self.swapper,
+                                                "sharded", False)
         if selector is not None and not np.array_equal(
                 np.asarray(selector, np.int8),
                 self.swapper.active_selector):
+            if sharded:
+                # a recompose re-derives the LPT plan too: freshen the
+                # new selector's placement so the swap lands on a plan
+                # built from current measured costs, not a stale cache
+                self.swapper.placement_for(
+                    np.asarray(selector, np.int8), fresh=True)
             self.swapper.swap_to(selector)
+        elif sharded:
+            # incumbent kept: load still changed enough to recompose,
+            # so rebalance the shards under the same selector
+            self.swapper.re_place()
 
     def join_recompose(self, timeout: float = 60.0) -> None:
         t = self._recompose_thread
@@ -211,3 +299,6 @@ class AdaptiveController:
         if self._monitor is not None:
             self._monitor.join(timeout=5.0)
         self.join_recompose(timeout=5.0)
+        t = self._replace_thread
+        if t is not None:
+            t.join(timeout=5.0)

@@ -15,13 +15,22 @@ a pointer flip.  It extends ``SelectorLadder`` — an ordered
 cheapest-to-richest family of selectors the controller walks: ``shed``
 steps down to a cheaper ensemble under overload, ``climb`` steps back
 up when load recedes.
+
+Placement is the second actuated dimension: with ``n_devices > 1`` (or
+an explicit ``placement_fn``) ``stage`` pre-stages ``(selector,
+placement)`` PAIRS — the selector's stacked bucket params sharded
+across devices per an LPT plan over measured bucket costs — and
+``re_place`` re-derives the plan from freshly measured costs and swaps
+it in under the SAME selector (the controller's RE-PLACE action).
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.serving.placement import Placement, placement_signature
 
 
 class SwappableService:
@@ -144,7 +153,12 @@ class HotSwapper(SelectorLadder):
     def __init__(self, pool: Sequence, initial_selector: np.ndarray,
                  vitals_model=None, labs_model=None,
                  warmup_batch_sizes: Sequence[int] = (1, 2, 4, 8),
-                 fused: bool = True, impl: str = "xla"):
+                 fused: bool = True, impl: str = "xla",
+                 n_devices: int = 1,
+                 devices: Optional[Sequence] = None,
+                 placement_fn: Optional[
+                     Callable[[np.ndarray], Placement]] = None,
+                 cost_reps: int = 3):
         super().__init__(initial_selector)
         self.pool = list(pool)
         self.vitals_model = vitals_model
@@ -152,20 +166,91 @@ class HotSwapper(SelectorLadder):
         self.warmup_batch_sizes = tuple(warmup_batch_sizes)
         self.fused = fused
         self.impl = impl
+        # placement actuation: n_devices > 1 shards staged services via
+        # LPT over measured bucket costs; placement_fn overrides the
+        # derivation (deterministic plans for tests / external planners)
+        self.n_devices = n_devices
+        self.devices = list(devices) if devices is not None else None
+        self.placement_fn = placement_fn
+        self.cost_reps = cost_reps
+        self.active_placement: Optional[Placement] = None
+        self._placements: Dict[bytes, Optional[Placement]] = {}
+        self._measure_cache: Dict[bytes, object] = {}
         self._staged: Dict[bytes, object] = {}
-        self._stage_lock = threading.Lock()    # guards the cache dict
+        self._stage_lock = threading.Lock()    # guards the cache dicts
         self._build_lock = threading.Lock()    # serializes builds
         self.facade = SwappableService(self.stage(initial_selector))
+        self.active_placement = self.placement_for(initial_selector)
 
-    def stage(self, selector: np.ndarray):
-        """Build + warm the selector's service (stacked bucket params,
-        compiled fused dispatch at the pow2 flush sizes).  Idempotent:
-        cached per selector; concurrent staging of the same selector
-        waits on the build lock instead of duplicating the expensive
+    @property
+    def sharded(self) -> bool:
+        return self.placement_fn is not None or self.n_devices > 1
+
+    # -------------------------------------------------------- placement
+    def placement_for(self, selector: np.ndarray,
+                      fresh: bool = False) -> Optional[Placement]:
+        """The selector's device plan (None when unsharded).  Plans are
+        cached per selector so ladder oscillation reuses staged shards;
+        ``fresh=True`` re-measures bucket costs and re-runs LPT — the
+        re-derivation recompose/RE-PLACE triggers ask for."""
+        if not self.sharded:
+            return None
+        key = np.asarray(selector, np.int8).tobytes()
+        with self._stage_lock:
+            if not fresh and key in self._placements:
+                return self._placements[key]
+        if self.placement_fn is not None:
+            pl = self.placement_fn(np.asarray(selector, np.int8))
+        else:
+            import jax
+            # clamp to the real device pool: an n_devices beyond it
+            # would plan parallelism that cannot exist (the service
+            # refuses such plans rather than folding slots silently)
+            avail = len(self.devices) if self.devices is not None \
+                else jax.device_count()
+            msvc = self._measure_service(selector)
+            pl = msvc.plan_placement(min(self.n_devices, avail),
+                                     reps=self.cost_reps) \
+                if len(msvc.members) else None
+        with self._stage_lock:
+            self._placements[key] = pl
+        return pl
+
+    def _measure_service(self, selector: np.ndarray):
+        """Unsharded service used to measure bucket costs, cached per
+        selector: only the TIMING must be fresh on re-derivation —
+        re-stacking the whole selected zoo's params each time would
+        multiply actuation latency for an identical result."""
+        from repro.serving.pipeline import EnsembleService
+        key = np.asarray(selector, np.int8).tobytes()
+        with self._stage_lock:
+            svc = self._measure_cache.get(key)
+        if svc is None:
+            svc = EnsembleService.for_selector(
+                self.pool, selector, fused=True, impl=self.impl)
+            with self._stage_lock:
+                svc = self._measure_cache.setdefault(key, svc)
+        return svc
+
+    def _skey(self, selector: np.ndarray,
+              placement: Optional[Placement]) -> bytes:
+        return np.asarray(selector, np.int8).tobytes() + b"|" \
+            + placement_signature(placement)
+
+    def stage(self, selector: np.ndarray,
+              placement: Optional[Placement] = None):
+        """Build + warm the (selector, placement) service: stacked
+        bucket params (``device_put``-sharded when placed), compiled
+        fused dispatch at the pow2 flush sizes.  ``placement=None``
+        derives the selector's plan (or stays unsharded).  Idempotent:
+        cached per pair; concurrent staging of the same pair waits on
+        the build lock instead of duplicating the expensive
         stack-and-compile."""
         from repro.serving.pipeline import EnsembleService
         sel = np.asarray(selector, np.int8)
-        key = sel.tobytes()
+        if placement is None:
+            placement = self.placement_for(sel)
+        key = self._skey(sel, placement)
         with self._stage_lock:
             svc = self._staged.get(key)
         if svc is not None:
@@ -178,7 +263,8 @@ class HotSwapper(SelectorLadder):
             svc = EnsembleService.for_selector(
                 self.pool, sel, vitals_model=self.vitals_model,
                 labs_model=self.labs_model, fused=self.fused,
-                impl=self.impl)
+                impl=self.impl, placement=placement,
+                devices=self.devices)
             if len(svc.members):
                 svc.warmup(batch_sizes=self.warmup_batch_sizes)
             with self._stage_lock:
@@ -193,19 +279,58 @@ class HotSwapper(SelectorLadder):
                 self.stage(s)
 
     def _activate(self, selector: np.ndarray) -> None:
-        self.facade.swap(self.stage(selector))
+        pl = self.placement_for(selector)
+        self.facade.swap(self.stage(selector, pl))
+        self.active_placement = pl
         self._evict_stale(selector)
+
+    def re_place(self, placement: Optional[Placement] = None) -> bool:
+        """Hot-swap the ACTIVE selector onto a new device plan — the
+        controller's RE-PLACE action.  ``placement=None`` re-derives
+        the LPT plan from freshly measured bucket costs.  Returns True
+        iff the plan actually changed (a no-op re-derivation must not
+        cost a swap or start a controller cooldown).
+
+        The expensive steps — cost measurement and staging — run
+        OUTSIDE ``_swap_lock``, so an emergency shed/climb is never
+        blocked behind a rebalance; only the pointer flip is locked.
+        """
+        with self._swap_lock:
+            sel = self.active_selector.copy()
+        pl = placement if placement is not None \
+            else self.placement_for(sel, fresh=True)
+        if placement_signature(pl) \
+                == placement_signature(self.active_placement):
+            return False
+        svc = self.stage(sel, pl)          # build/warm off the lock
+        with self._swap_lock:
+            if not np.array_equal(sel, self.active_selector):
+                return False   # raced a selector swap, whose own
+                               # activation derived a fresh plan
+            with self._stage_lock:
+                self._placements[np.asarray(sel, np.int8).tobytes()] = pl
+            self.facade.swap(svc)
+            self.active_placement = pl
+            self._evict_stale(sel)
+            return True
 
     def _evict_stale(self, active: np.ndarray) -> None:
         """Drop staged services that are neither active nor a ladder
         rung: under drifting load every recompose can yield a novel
-        selector, and each staged service holds stacked param copies +
-        compiled dispatch fns — without eviction a long-running
-        deployment leaks until OOM.  (A service still finishing an
-        in-flight flush stays alive via the flush's reference.)"""
-        keep = {np.asarray(active, np.int8).tobytes()}
+        (selector, placement) pair, and each staged service holds
+        stacked param copies + compiled dispatch fns — without eviction
+        a long-running deployment leaks until OOM.  (A service still
+        finishing an in-flight flush stays alive via the flush's
+        reference.)"""
         with self._swap_lock:
-            keep.update(s.tobytes() for s in self._ladder)
+            rungs = [np.asarray(active, np.int8)] + list(self._ladder)
         with self._stage_lock:
+            keep = {s.tobytes() + b"|"
+                    + placement_signature(self._placements.get(
+                        s.tobytes())) for s in rungs}
             for k in [k for k in self._staged if k not in keep]:
                 del self._staged[k]
+            keep_sel = {s.tobytes() for s in rungs}
+            for k in [k for k in self._measure_cache
+                      if k not in keep_sel]:
+                del self._measure_cache[k]

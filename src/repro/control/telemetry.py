@@ -45,6 +45,9 @@ class TelemetrySnapshot:
     violation_rate: float          # frac of served with latency > SLO
     ts: float = float("nan")       # active selector's T_s (if provided)
     tq_bound: float = float("nan")  # online network-calculus T_q bound
+    # max/mean bucket load of the ACTIVE device placement (1.0 ==
+    # balanced; nan when unsharded / no profile): the RE-PLACE signal
+    placement_imbalance: float = float("nan")
 
     @property
     def predicted_latency(self) -> float:
@@ -140,7 +143,8 @@ class SloTelemetry:
 
     def snapshot(self, mu: Optional[float] = None, ts: float = 0.0,
                  now: Optional[float] = None,
-                 since: Optional[float] = None) -> TelemetrySnapshot:
+                 since: Optional[float] = None,
+                 imbalance: Optional[float] = None) -> TelemetrySnapshot:
         """``since`` restricts the reading to events AFTER that time —
         the controller passes its last actuation time so decisions rest
         on post-action evidence only (a violation burst that triggered
@@ -176,4 +180,6 @@ class SloTelemetry:
             arrival_rate=len(arr) / span,
             p50=p50, p99=p99, violation_rate=viol,
             ts=float(ts) if mu is not None else float("nan"),
-            tq_bound=tq)
+            tq_bound=tq,
+            placement_imbalance=float(imbalance)
+            if imbalance is not None else float("nan"))

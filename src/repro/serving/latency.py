@@ -18,6 +18,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.profiles import ModelZoo, SystemConfig
+from repro.serving.placement import Placement, lpt_placement
 
 
 # ------------------------------------------------------- network calculus
@@ -108,18 +109,21 @@ class LatencyProfiler:
         return float(sum(p.memory_bytes for p, bi
                          in zip(self.zoo.profiles, b) if bi))
 
-    def serving_latency(self, b: np.ndarray) -> float:
-        """T_s: makespan of the selected models greedily placed (LPT) on
-        n_devices — the ensemble members run concurrently (§3.4 stateless
-        actors), so T_s is the slowest device's total work."""
-        costs = sorted((self.model_cost(i) for i in range(len(b))
-                        if b[i]), reverse=True)
+    def serving_latency(self, b: np.ndarray,
+                        placement: Optional[Placement] = None) -> float:
+        """T_s: PER-DEVICE MAKESPAN of the selected models under their
+        device placement — the ensemble members run concurrently (§3.4
+        stateless actors), so T_s is the slowest device's total work,
+        not the sum over members.  ``placement=None`` plans with the
+        same ``lpt_placement`` the live sharded service actuates, so
+        the offline model and the serving path share one planner; pass
+        the ACTIVE plan to score what is actually deployed."""
+        costs = [self.model_cost(i) for i in range(len(b)) if b[i]]
         if not costs:
             return self.fixed_overhead
-        loads = [0.0] * max(1, self.config.n_devices)
-        for c in costs:
-            loads[int(np.argmin(loads))] += c
-        return max(loads) + self.fixed_overhead
+        if placement is None:
+            placement = lpt_placement(costs, self.config.n_devices)
+        return placement.makespan + self.fixed_overhead
 
     def throughput(self, b: np.ndarray) -> float:
         """mu (queries/s): total device-seconds per ensemble query is

@@ -19,10 +19,24 @@ micro-batches windows from MANY patients into the same stacked call —
 one host->device transfer in and one blocking device sync out per flush.
 The per-member loop is kept (``fused=False``) as the equivalence oracle
 and for per-member cost measurement (``measured_costs``).
+
+Multi-device sharded serving (``placement=``)
+---------------------------------------------
+A ``serving.placement.Placement`` shards the stacked bucket params
+across ``jax.devices()``: each placement slot's members are bucketed
+independently and every (bucket, device) shard gets its own
+``device_put``-pinned stacked pytree, so a flush issues one stacked
+dispatch per shard — all async, on their own devices — and the scores
+are combined by a single host-side gather at the end (the cross-device
+gather/sum of Eq. 5).  Placement is controller-actuated state:
+``control.swap.HotSwapper`` stages ``(selector, placement)`` pairs and
+the adaptive controller re-derives the LPT plan from freshly measured
+bucket costs (``measured_bucket_costs`` -> ``plan_placement``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
@@ -36,7 +50,8 @@ from repro.configs.ecg_zoo import (CLIP_SECONDS, ECG_HZ, EcgModelSpec,
 from repro.launch.ensemble_parallel import stack_members
 from repro.models.ecg_resnext import ecg_apply, ecg_apply_stacked
 from repro.serving.aggregator import ModalitySpec, PatientAggregator
-from repro.serving.placement import lpt_placement
+from repro.serving.placement import (Placement, grouped_lpt_placement,
+                                     lpt_placement)
 
 
 @dataclasses.dataclass
@@ -47,12 +62,15 @@ class ZooMember:
 
 @dataclasses.dataclass
 class _Bucket:
-    """One stacked-execution group: structurally identical members."""
+    """One stacked-execution group: structurally identical members.
+    With a placement this is a (bucket, device) SHARD — the same bucket
+    may appear once per device its members were assigned to."""
     spec: EcgModelSpec            # shape-defining representative
     idx: List[int]                # member indices into self.members
     leads: List[int]              # per stacked member, the lead it reads
     stacked: Dict                 # stack_members() pytree, leading axis M
     fn: Callable                  # jitted [M, P, L, 1] -> scores [M, P]
+    device: object = None         # jax.Device the shard is pinned to
 
 
 def _make_member_fn(params: Dict, spec: EcgModelSpec,
@@ -61,12 +79,25 @@ def _make_member_fn(params: Dict, spec: EcgModelSpec,
         ecg_apply(params, x, spec, impl=impl), axis=-1)[:, 1])
 
 
-def _make_bucket_fn(spec: EcgModelSpec, impl: str) -> Callable:
+@functools.lru_cache(maxsize=None)
+def _make_bucket_fn_cached(spec: EcgModelSpec, impl: str) -> Callable:
     @jax.jit
     def fn(stacked: Dict, xs: jax.Array) -> jax.Array:
         logits = ecg_apply_stacked(stacked, xs, spec, impl=impl)
         return jax.nn.softmax(logits, axis=-1)[..., 1]     # [M, P]
     return fn
+
+
+def _make_bucket_fn(spec: EcgModelSpec, impl: str) -> Callable:
+    """Shared per (architecture, impl): every service (and every staged
+    (selector, placement) pair) reuses ONE jit object per bucket shape,
+    so re-staging across swaps/placements hits the compile cache
+    instead of recompiling identical programs.  ``name``/``lead`` are
+    blanked from the cache key — lead selection happens on the host
+    when the input is built, so two buckets whose representative
+    members differ only by lead share the same XLA program."""
+    return _make_bucket_fn_cached(
+        dataclasses.replace(spec, name="", lead=0), impl)
 
 
 class EnsembleService:
@@ -78,18 +109,42 @@ class EnsembleService:
     numerical oracle).  ``dispatch_count`` tallies jitted zoo dispatches
     issued by ``predict``/``predict_batch`` — the quantity the serving
     benchmark tracks per query.
+
+    ``placement`` (a ``serving.placement.Placement`` whose assignment
+    covers every member exactly once) shards the fused plan across
+    ``devices`` (default ``jax.devices()``): slot d's members are
+    bucketed on their own and pinned to device d, one stacked dispatch
+    per (bucket, device) shard.  BUCKET-ALIGNED plans (each bucket
+    whole on one device — what ``plan_placement`` emits) are bitwise
+    identical to the unsharded path: the stacked grouping never
+    changes, only where it runs.  Arbitrary member-level assignments
+    are also valid but alter the stacked member-axis size, so they
+    match to float tolerance only.
     """
 
     def __init__(self, members: Sequence[ZooMember],
                  vitals_model=None, labs_model=None,
                  n_devices: int = 1, fused: bool = True,
-                 impl: str = "xla"):
+                 impl: str = "xla",
+                 placement: Optional[Placement] = None,
+                 devices: Optional[Sequence] = None):
         self.members = list(members)
         self.vitals_model = vitals_model
         self.labs_model = labs_model
         self.fused = fused
         self.impl = impl
         self.n_devices = n_devices
+        self.placement = placement
+        self._devices = list(devices) if devices is not None else None
+        if placement is not None:
+            if not fused:
+                raise ValueError("placement requires the fused path")
+            placed = sorted(i for slot in placement.assignment
+                            for i in slot)
+            if placed != list(range(len(self.members))):
+                raise ValueError(
+                    f"placement must cover every member exactly once: "
+                    f"got {placed} for {len(self.members)} members")
         self.dispatch_count = 0
         self._count_lock = threading.Lock()    # server workers share us
         self._fns: List[Callable] = [
@@ -117,44 +172,112 @@ class EnsembleService:
 
     def _build_buckets(self) -> List[_Bucket]:
         specs = [m.spec for m in self.members]
+        if self.placement is None:
+            groups = [(None, list(range(len(specs))))]
+        else:
+            devs = self._devices if self._devices is not None \
+                else jax.devices()
+            used = [d for d, slot
+                    in enumerate(self.placement.assignment) if slot]
+            if used and used[-1] >= len(devs):
+                # refuse to silently fold slots onto fewer devices: the
+                # plan's makespan/imbalance would describe parallelism
+                # that does not exist, poisoning the controller's T_s
+                raise ValueError(
+                    f"placement uses slot {used[-1]} but only "
+                    f"{len(devs)} device(s) are available")
+            groups = [(devs[d], list(slot))
+                      for d, slot in enumerate(self.placement.assignment)
+                      if slot]
         out = []
-        for key, idx in bucket_zoo(specs).items():
-            spec = specs[idx[0]]
-            out.append(_Bucket(
-                spec=spec, idx=list(idx),
-                leads=[specs[i].lead for i in idx],
-                stacked=stack_members([self.members[i].params
-                                       for i in idx]),
-                fn=_make_bucket_fn(spec, self.impl)))
+        for dev, mem_idx in groups:
+            for local in bucket_zoo([specs[i] for i in mem_idx]).values():
+                idx = [mem_idx[j] for j in local]
+                spec = specs[idx[0]]
+                stacked = stack_members([self.members[i].params
+                                         for i in idx])
+                if dev is not None:
+                    stacked = jax.device_put(stacked, dev)
+                out.append(_Bucket(
+                    spec=spec, idx=idx,
+                    leads=[specs[i].lead for i in idx],
+                    stacked=stacked,
+                    fn=_make_bucket_fn(spec, self.impl),
+                    device=dev))
         return out
 
     @property
     def n_buckets(self) -> int:
+        """Stacked dispatches per flush: architecture buckets, or
+        (bucket, device) shards when a placement is active."""
         return len(self._buckets)
 
+    def plan_placement(self, n_devices: int,
+                       bucket_costs: Optional[Sequence[float]] = None,
+                       reps: int = 3) -> Placement:
+        """LPT plan over measured (or given) per-bucket costs, at BUCKET
+        granularity: a stacked bucket is atomic, so the plan never splits
+        one stacked dispatch across devices.  The returned assignment is
+        in member indices, ready for ``EnsembleService(placement=...)``."""
+        groups = list(bucket_zoo([m.spec for m in self.members]).values())
+        if bucket_costs is None:
+            if self.placement is not None:
+                raise ValueError("measure bucket costs on an unsharded "
+                                 "service (or pass bucket_costs)")
+            bucket_costs = self.measured_bucket_costs(reps=reps)
+        return grouped_lpt_placement(groups, list(bucket_costs),
+                                     n_devices)
+
     # ---------------------------------------------------------- warmup
+    def _bucket_input(self, b: _Bucket, p: int) -> jax.Array:
+        x = np.zeros((len(b.idx), p, b.spec.input_len, 1), np.float32)
+        if b.device is not None:
+            return jax.device_put(x, b.device)
+        return jnp.asarray(x)
+
     def warmup(self, batch_sizes: Sequence[int] = (1,)) -> None:
         if self.fused:
             for b in self._buckets:
                 for p in batch_sizes:
-                    b.fn(b.stacked, jnp.zeros(
-                        (len(b.idx), p, b.spec.input_len, 1))
-                         ).block_until_ready()
+                    b.fn(b.stacked,
+                         self._bucket_input(b, p)).block_until_ready()
         else:
             for m, fn in zip(self.members, self._fns):
                 fn(jnp.zeros((1, m.spec.input_len, 1)))
 
-    def measured_costs(self, reps: int = 3) -> List[float]:
+    def measured_costs(self, reps: int = 3,
+                       warmup: int = 1) -> List[float]:
         """Closed-loop per-member seconds/query (the mu measurement).
         Always uses the per-member fns — the composer's latency profiler
-        needs individual member costs regardless of fused serving."""
+        needs individual member costs regardless of fused serving.
+        ``warmup`` untimed calls precede the timed reps so compile time
+        never leaks into the estimate."""
         out = []
         for m, fn in zip(self.members, self._fns):
             x = jnp.zeros((1, m.spec.input_len, 1))
-            fn(x).block_until_ready()              # per-member warmup
+            for _ in range(max(1, warmup)):
+                fn(x).block_until_ready()
             t0 = time.perf_counter()
             for _ in range(reps):
                 fn(x).block_until_ready()
+            out.append((time.perf_counter() - t0) / reps)
+        return out
+
+    def measured_bucket_costs(self, reps: int = 3, batch: int = 1,
+                              warmup: int = 1) -> List[float]:
+        """Closed-loop seconds per stacked bucket dispatch — the cost
+        vector the LPT placement planner consumes.  Each bucket is
+        warmed with ``warmup`` untimed calls first: without that, the
+        first call's compile time would fold into the cost estimate and
+        skew the plan toward whichever bucket compiled first."""
+        out = []
+        for b in self._buckets:
+            x = self._bucket_input(b, batch)
+            for _ in range(max(1, warmup)):
+                b.fn(b.stacked, x).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                b.fn(b.stacked, x).block_until_ready()
             out.append((time.perf_counter() - t0) / reps)
         return out
 
@@ -188,16 +311,20 @@ class EnsembleService:
         pending = []
         for b in self._buckets:
             L = b.spec.input_len
-            xs = np.zeros((len(b.idx), Ppad, L), np.float32)
+            xs = np.zeros((len(b.idx), Ppad, L, 1), np.float32)
             for j, lead in enumerate(b.leads):
                 for p, w in enumerate(batch):
                     clip = np.asarray(w["ecg"])[lead, -L:]
-                    xs[j, p, L - clip.shape[-1]:] = clip
-            y = b.fn(b.stacked, jnp.asarray(xs[..., None]))
+                    xs[j, p, L - clip.shape[-1]:, 0] = clip
+            # sharded plan: pin the input beside its pinned params so
+            # the dispatch runs on (and stays on) the shard's device
+            x = jax.device_put(xs, b.device) if b.device is not None \
+                else jnp.asarray(xs)
+            y = b.fn(b.stacked, x)
             pending.append((b, y))                     # async dispatch
         with self._count_lock:
             self.dispatch_count += len(pending)
-        for b, y in pending:                           # one sync point
+        for b, y in pending:      # one sync point: cross-device gather
             score_mat[b.idx] = np.asarray(
                 jax.block_until_ready(y))[:, :P]
 

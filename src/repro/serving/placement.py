@@ -5,11 +5,18 @@ onto devices — used by the latency profiler's T_s model and by the
 pipeline's device assignment.  For the datacenter-scale zoo, the same
 logic plans which POD (mesh axis 0 slice) hosts which ensemble member —
 HOLMES' ensemble-parallelism mapped onto the multi-pod mesh (DESIGN.md §5).
+
+A ``Placement`` is controller-actuated serving state (alongside the
+selector): ``serving.pipeline.EnsembleService`` shards its stacked
+bucket params across ``jax.devices()`` per the assignment,
+``control.swap.HotSwapper`` pre-stages ``(selector, placement)`` pairs,
+and the adaptive controller re-derives the plan from freshly measured
+costs when it recomposes or when load imbalance warrants a RE-PLACE.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,14 +27,36 @@ class Placement:
     loads: List[float]                # per device/pod total cost
 
     @property
+    def n_slots(self) -> int:
+        return len(self.assignment)
+
+    @property
     def makespan(self) -> float:
         return max(self.loads) if self.loads else 0.0
 
     @property
     def imbalance(self) -> float:
-        if not self.loads or max(self.loads) == 0:
+        """max load / mean NONZERO-slot load, >= 1 whenever any work is
+        placed (1.0 == perfectly balanced over the used slots)."""
+        used = [l for l in self.loads if l > 0]
+        if not used:
             return 0.0
-        return max(self.loads) / (sum(self.loads) / len(self.loads))
+        return max(used) / (sum(used) / len(used))
+
+    @property
+    def n_members(self) -> int:
+        return sum(len(a) for a in self.assignment)
+
+    def signature(self) -> bytes:
+        """Stable identity for staging caches: two placements with the
+        same device->members map are the same actuated state."""
+        return repr([sorted(a) for a in self.assignment]).encode()
+
+
+def placement_signature(placement: Optional[Placement]) -> bytes:
+    """Cache-key fragment; None (unsharded single-device service) gets a
+    distinct tag so it never collides with a real plan."""
+    return b"<single>" if placement is None else placement.signature()
 
 
 def lpt_placement(costs: Sequence[float], n_slots: int) -> Placement:
@@ -39,6 +68,22 @@ def lpt_placement(costs: Sequence[float], n_slots: int) -> Placement:
         assignment[j].append(int(i))
         loads[j] += float(costs[i])
     return Placement(assignment=assignment, loads=loads)
+
+
+def grouped_lpt_placement(groups: Sequence[Sequence[int]],
+                          group_costs: Sequence[float],
+                          n_slots: int) -> Placement:
+    """LPT over atomic GROUPS of members (architecture buckets): each
+    group lands on one slot whole, so a stacked bucket dispatch is never
+    split across devices.  ``assignment`` is expanded back to member
+    indices; ``loads`` carry the group costs."""
+    if len(groups) != len(group_costs):
+        raise ValueError(f"{len(groups)} groups != "
+                         f"{len(group_costs)} costs")
+    pl = lpt_placement(group_costs, n_slots)
+    assignment = [[m for g in slot for m in groups[g]]
+                  for slot in pl.assignment]
+    return Placement(assignment=assignment, loads=pl.loads)
 
 
 def plan_pod_ensemble(member_costs: Dict[str, float], n_pods: int

@@ -49,6 +49,17 @@ class TimestampedQueue:
     def __len__(self) -> int:
         return len(self._q)
 
+    def retain(self, pred: Callable[[Any], bool]) -> List[Any]:
+        """Keep only items matching ``pred`` (in order); returns the
+        removed items.  Wait stats are untouched — the DES uses this at
+        an epoch cutoff, where the removed tasks carry over rather than
+        retire."""
+        kept, removed = [], []
+        for t, item in self._q:
+            (kept if pred(item) else removed).append((t, item))
+        self._q = collections.deque(kept)
+        return [item for _, item in removed]
+
     def waits(self) -> QueueStats:
         return self.stats
 

@@ -43,6 +43,13 @@ class SimConfig:
     # (desynchronized beds), 0.0 = a step admission fires all its new
     # patients' windows at the same instant (thundering-herd burst)
     churn_phase_jitter: float = 1.0
+    # epoch mode: cut the run at duration_seconds instead of draining —
+    # queries that never started by the cutoff are returned as
+    # ``SimResult.backlog`` (ages) for the NEXT epoch's ``simulate``
+    # call to ingest at t=0, so sustained overload accumulates across
+    # epoch boundaries instead of resetting.  False keeps the original
+    # drain-to-empty behaviour, untouched.
+    carry_backlog: bool = False
 
 
 @dataclasses.dataclass
@@ -76,6 +83,11 @@ class SimResult:
         dataclasses.field(default_factory=dict)
     churn_log: List[Tuple[float, str, int]] = \
         dataclasses.field(default_factory=list)
+    # carry_backlog mode: ages (seconds since birth, measured at the
+    # cutoff) of queries that never started service this epoch — feed
+    # them to the next epoch's ``simulate(..., backlog=)``
+    backlog: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.asarray([]))
 
     def latencies(self) -> np.ndarray:
         return np.asarray([q.latency for q in self.queries])
@@ -92,8 +104,21 @@ class SimResult:
         return self.device_busy / max(self.duration, 1e-9)
 
 
-def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
-    """model_costs: seconds/query for each SELECTED ensemble member."""
+def simulate(model_costs: Sequence[float], cfg: SimConfig,
+             backlog: Sequence[float] = ()) -> SimResult:
+    """model_costs: seconds/query for each SELECTED ensemble member.
+    ``backlog``: ages of queries carried in from a previous epoch
+    (``SimResult.backlog``); they enter the model queue at t=0 with
+    negative birth times, so their end-to-end latency keeps
+    accumulating across the epoch edge and is never double-counted —
+    the carrying epoch returns them unserved, the serving epoch
+    retires them exactly once."""
+    if cfg.carry_backlog and cfg.batch_period > 0:
+        # batch mode schedules its final FLUSH past duration_seconds,
+        # so held queries would be served beyond the epoch edge instead
+        # of carried — the combination has no coherent epoch semantics
+        raise ValueError("carry_backlog is incompatible with "
+                         "batch_period > 0")
     rng = np.random.default_rng(cfg.seed)
     costs = list(model_costs)
     events: List[Tuple[float, int, int, tuple]] = []
@@ -178,8 +203,25 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
             device_busy += c
             push(now + c + cfg.dispatch_overhead, DEVICE_FREE, (rec,))
 
+    # backlog carried in from the previous epoch: already-born queries
+    # join the model queue at t=0, ahead of this epoch's first window
+    for k, age in enumerate(backlog):
+        enqueue_query(QueryRecord(patient=-(k + 1),
+                                  t_window=-float(age)), 0.0)
+    if len(backlog):
+        try_dispatch(0.0)
+
+    closed = False                     # carry_backlog epoch cutoff hit
+
     while events:
         now, _, kind, payload = heapq.heappop(events)
+        if cfg.carry_backlog and not closed \
+                and now > cfg.duration_seconds:
+            # epoch edge: queries already in service run to completion
+            # (their queued tasks stay), never-started queries carry
+            # over whole — no partial work is redone or double-served
+            closed = True
+            model_q.retain(lambda task: task[0].t_start >= 0)
         if kind == CENSUS:
             target = payload[0]
             if target > len(active):
@@ -218,6 +260,11 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
                  cfg.duration_seconds) - t_a) / cfg.chunk_seconds
             for p, t_a in admit_t.items()))
     done = [q for q in queries if q.t_done > 0]
+    # oldest first, so the next epoch's FIFO serves in birth order
+    backlog_out = np.asarray(sorted(
+        (cfg.duration_seconds - q.t_window
+         for q in queries if q.t_done <= 0), reverse=True)) \
+        if cfg.carry_backlog else np.asarray([])
     return SimResult(
         queries=done,
         arrivals=np.asarray(sorted(q.t_window for q in queries)),
@@ -227,4 +274,5 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig) -> SimResult:
         queue_stats={"models": model_q.waits()},
         patients={p: (t_a, discharge_t.get(p, float("inf")), phase_of[p])
                   for p, t_a in admit_t.items()},
-        churn_log=churn_log)
+        churn_log=churn_log,
+        backlog=backlog_out)

@@ -1,6 +1,14 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see the single real CPU device; only launch/dryrun.py forces 512
-placeholder devices (and runs in its own process).
+"""Shared fixtures.  NOTE: no XLA_FLAGS by default — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py
+forces 512 placeholder devices (and runs in its own process).
+
+The EXCEPTION is the multi-device lane: setting ``REPRO_MULTI_DEVICE=1``
+(or exporting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+directly, as the CI lane does) forces 8 host devices BEFORE jax
+initialises, so the ``multi_device``-marked placement tests run
+in-process.  In the default single-device lane those tests skip and
+``test_placement_serving.py``'s subprocess wrapper re-runs them in a
+child with the flag set.
 
 Heavy integration tests carry ``@pytest.mark.slow`` (registered below) so
 ``pytest -m "not slow"`` gives a fast signal; the shared zoo fixtures are
@@ -11,6 +19,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# env-guarded multi-device lane: must happen before anything imports jax
+if os.environ.get("REPRO_MULTI_DEVICE"):
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import numpy as np
 import pytest
 
@@ -19,6 +32,11 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slow: heavy integration test (deselect with -m 'not slow')")
+    config.addinivalue_line(
+        "markers",
+        "multi_device: needs >= 8 forced host devices (XLA_FLAGS / "
+        "REPRO_MULTI_DEVICE lane, or the subprocess wrapper in "
+        "test_placement_serving.py)")
 
 
 @pytest.fixture(scope="session")

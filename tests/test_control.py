@@ -202,6 +202,52 @@ def test_swappable_service_atomic():
     assert fac.swap_count == 1
 
 
+def test_swappable_service_swap_mid_flush_stress():
+    """Swaps landing mid-``predict_batch`` flush: every in-flight query
+    must complete on exactly ONE service (the one its flush grabbed),
+    never straddle two, and never be dropped or duplicated."""
+    class TaggedService:
+        def __init__(self, tag):
+            self.tag = tag
+
+        def predict_batch(self, batch):
+            time.sleep(0.0005)            # a swap can land mid-flush
+            return [(self.tag, q) for q in batch]
+
+    fac = SwappableService(TaggedService(0))
+    n_threads, per_thread = 4, 60
+    results, lock = [], threading.Lock()
+
+    def worker(k):
+        for i in range(per_thread):
+            out = fac.predict_batch([(k, i), (k, i + 10_000)])
+            # both co-flushed queries retired by the SAME service
+            assert out[0][0] == out[1][0]
+            with lock:
+                results.extend(out)
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    n_swaps = 50
+    for s in range(n_swaps):              # swap while flushes in flight
+        fac.swap(TaggedService(s + 1))
+        time.sleep(0.001)
+    for t in threads:
+        t.join()
+    assert fac.swap_count == n_swaps
+    # exactly once: every submitted query came back with one tag
+    seen = {}
+    for tag, q in results:
+        assert 0 <= tag <= n_swaps
+        seen.setdefault(q, []).append(tag)
+    want = {(k, i + off) for k in range(n_threads)
+            for i in range(per_thread) for off in (0, 10_000)}
+    assert set(seen) == want
+    assert all(len(tags) == 1 for tags in seen.values())
+
+
 # ------------------------------------------------- hot-swap correctness
 def test_hot_swap_zero_drop_and_bitwise_equal(zoo_members, rng):
     """Swapping selectors mid-stream must drop zero queries, and every
@@ -300,6 +346,86 @@ def test_decide_recomposes_on_drift_and_predicted_risk():
     assert ctl.decide(_snap(arrival_rate=1.0)) is Decision.RECOMPOSE
     ctl.baseline_rate = None
     assert ctl.decide(_snap(ts=0.3, tq_bound=1.1)) is Decision.RECOMPOSE
+
+
+def test_replace_triggers_once_until_placement_changes():
+    """An unimprovable plan (re_place returns False) must not be
+    re-tried every step — that would re-measure costs forever and
+    starve the recompose/climb branches below REPLACE."""
+    from repro.serving.placement import Placement
+
+    class ReplaceLadder(_NoopLadder):
+        def __init__(self, sel):
+            super().__init__(sel)
+            self.active_placement = Placement([[0], [1, 2]], [1.0, 2.0])
+            self.re_place_calls = 0
+
+        def re_place(self, placement=None):
+            self.re_place_calls += 1
+            return False                  # LPT cannot do better
+
+    lad = ReplaceLadder(_sel(4, [0, 1, 2]))
+    lad.set_ladder([_sel(4, [0]), _sel(4, [0, 1, 2])])
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=30.0,
+                       clock=lambda: 100.0)
+    for k in range(30):
+        tel.record_arrival(80.0 + k / 2)
+        tel.record_served(0.1, 80.0 + k / 2)
+    ctl = AdaptiveController(
+        tel, lad,
+        config=ControllerConfig(slo_seconds=1.0, cooldown_seconds=0.0,
+                                imbalance_high=1.25),
+        service_profile_fn=lambda: (50.0, 0.05, 2.0),   # imbalanced
+        sync=True, clock=lambda: 100.0)
+    assert ctl.decide(ctl.snapshot()) is Decision.REPLACE
+    assert ctl.step() is Decision.HOLD    # re_place no-op: no action
+    assert lad.re_place_calls == 1
+    assert ctl.step() is Decision.HOLD    # guard: not re-tried
+    assert lad.re_place_calls == 1
+    # the placement changed some other way: REPLACE is eligible again
+    lad.active_placement = Placement([[0, 1], [2]], [2.0, 1.0])
+    assert ctl.decide(ctl.snapshot()) is Decision.REPLACE
+
+
+def test_controller_async_replace_does_not_block_step():
+    """sync=False: the expensive measure+stage of a RE-PLACE runs in a
+    background thread — step() returns immediately and the monitor
+    stays free to act while the rebalance is in flight."""
+    from repro.serving.placement import Placement
+
+    class SlowReplaceLadder(_NoopLadder):
+        def __init__(self, sel):
+            super().__init__(sel)
+            self.active_placement = Placement([[0], [1, 2]], [1.0, 3.0])
+            self.release = threading.Event()
+
+        def re_place(self, placement=None):
+            self.release.wait(2.0)        # a slow cost measurement
+            self.active_placement = Placement([[0, 2], [1]], [2.0, 2.0])
+            return True
+
+    lad = SlowReplaceLadder(_sel(4, [0, 1, 2]))
+    lad.set_ladder([_sel(4, [0]), _sel(4, [0, 1, 2])])
+    t = [100.0]
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=30.0,
+                       clock=lambda: t[0])
+    for k in range(30):
+        tel.record_arrival(80.0 + k / 2)
+        tel.record_served(0.1, 80.0 + k / 2)
+    ctl = AdaptiveController(
+        tel, lad,
+        config=ControllerConfig(slo_seconds=1.0, cooldown_seconds=0.0),
+        service_profile_fn=lambda: (50.0, 0.05, 3.0),
+        sync=False, clock=lambda: t[0])
+    t0 = time.monotonic()
+    assert ctl.step() is Decision.REPLACE
+    assert time.monotonic() - t0 < 0.5    # did not wait on re_place
+    assert ctl._replacing.is_set()
+    assert ctl.step() is Decision.HOLD    # one rebalance in flight
+    lad.release.set()
+    ctl._replace_thread.join(5.0)
+    assert lad.active_placement.loads == [2.0, 2.0]
+    assert ctl._replace_noop_sig is None  # it acted: no no-op brand
 
 
 def test_decide_climbs_only_with_headroom():
@@ -451,6 +577,61 @@ def test_default_path_has_no_churn_bookkeeping():
     r = simulate([0.01], SimConfig(n_patients=4, duration_seconds=40.0,
                                    window_seconds=10.0))
     assert r.patients == {} and r.churn_log == []
+
+
+# --------------------------------------------- backlog carry-over (DES)
+def test_backlog_conserved_at_epoch_edge():
+    """carry_backlog epoch cut: every born query is either retired this
+    epoch or carried out — none dropped, none double-counted."""
+    cfg = SimConfig(n_patients=30, n_devices=1, window_seconds=5.0,
+                    duration_seconds=40.0, seed=0, carry_backlog=True)
+    r1 = simulate([0.3], cfg)             # overloaded: backlog builds
+    assert len(r1.backlog) > 0
+    assert len(r1.queries) + len(r1.backlog) == len(r1.arrivals)
+    # backlog ages are within the epoch and oldest-first
+    assert np.all(r1.backlog > 0) and np.all(r1.backlog <= 40.0)
+    assert np.all(np.diff(r1.backlog) <= 0)
+
+    # next epoch ingests the carry: each carried query is served exactly
+    # once (or carried again), with latency that spans the epoch edge
+    r2 = simulate([0.05], cfg, backlog=r1.backlog)
+    from_backlog = [q for q in r2.queries if q.t_window < 0]
+    carried_again = int(np.sum(r2.backlog > cfg.duration_seconds)) \
+        if len(r2.backlog) else 0
+    assert len(from_backlog) + carried_again == len(r1.backlog)
+    assert all(q.latency > 0 for q in from_backlog)
+    ages = sorted(-q.t_window for q in from_backlog)
+    assert ages == sorted(a for a in r1.backlog)[:len(ages)]
+
+
+def test_backlog_drain_mode_unchanged():
+    """carry_backlog=False keeps the original drain-to-empty semantics:
+    no backlog, every query retired in its own epoch."""
+    cfg = SimConfig(n_patients=30, n_devices=1, window_seconds=5.0,
+                    duration_seconds=40.0, seed=0)
+    r = simulate([0.3], cfg)
+    assert len(r.backlog) == 0
+    assert len(r.queries) == len(r.arrivals)
+
+
+def test_adaptive_bench_conserves_queries_across_epochs():
+    """Regression for the epoch-edge accounting in the adaptive bench:
+    total born == total served + final backlog, per arm."""
+    from benchmarks.adaptive_bench import run_adaptive_sim, \
+        synthetic_testbed
+    zoo, costs, f_a = synthetic_testbed(seed=0)
+    common = dict(zoo=zoo, costs=costs, f_a=f_a, slo=1.0,
+                  schedule=[(2, 24), (2, 72), (2, 24)], seed=0)
+    for adaptive in (False, True):
+        out = run_adaptive_sim(adaptive=adaptive, **common)
+        assert out["born_total"] \
+            == out["served_total"] + out["final_backlog"]
+        for rec in out["epochs"]:
+            assert rec["served"] + rec["backlog_out"] \
+                == rec["born"] + rec["backlog_in"]
+        # the static arm under sustained overload actually carries work
+        if not adaptive:
+            assert any(rec["backlog_out"] > 0 for rec in out["epochs"])
 
 
 # ------------------------------------------------- adaptive end-to-end
