@@ -27,9 +27,11 @@ from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.control.controller import (AdaptiveController, ControllerConfig)
+from repro.control.controller import (AdaptiveController, ControllerConfig,
+                                      TieredController,
+                                      TieredControllerConfig)
 from repro.control.swap import SelectorLadder
-from repro.control.telemetry import SloTelemetry
+from repro.control.telemetry import SloTelemetry, TieredTelemetry
 from repro.core.bagging import roc_auc
 from repro.core.composer import ComposerParams, compose, recompose
 from repro.core.profiles import ModelProfile, ModelZoo, SystemConfig
@@ -222,6 +224,151 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
             "final_backlog": len(carry)}
 
 
+DEFAULT_TIER_FRACS = {"stable": 0.60, "elevated": 0.25,
+                      "critical": 0.15}
+
+
+def run_tiered_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
+                   slo: float, schedule: Sequence[Tuple[int, int]],
+                   tier_fracs: Dict[str, float] = None,
+                   escalate_hazard: float = 0.02,
+                   epoch_seconds: float = 40.0,
+                   window_seconds: float = 10.0, n_devices: int = 2,
+                   seed: int = 0, rho_max: float = 0.8,
+                   compose_params: ComposerParams = None,
+                   verbose: bool = False) -> Dict:
+    """The per-acuity-tier closed loop over the DES: every tier starts
+    on the RICH composed ensemble; under the census spike the
+    priority-aware controller sheds stable-tier rungs first (and floors
+    them in one actuation when the predicted device budget demands it)
+    while the critical tier holds the rich ensemble — the headline
+    claim is critical-tier p99/accuracy at rich-ensemble levels while
+    only low-acuity rungs degrade.  Per-tier conservation fields
+    (born = served + backlog_out - backlog_in, per tier, per epoch)
+    sum to the fleet totals."""
+    costs = np.asarray(costs, np.float64)
+    fracs = dict(tier_fracs or DEFAULT_TIER_FRACS)
+    tiers = tuple(fracs)
+    epochs = [c for n_ep, c in schedule for _ in range(n_ep)]
+
+    f_l0 = LatencyProfiler(
+        zoo, SystemConfig(n_devices=n_devices, n_patients=epochs[0],
+                          window_seconds=window_seconds),
+        cost_fn=lambda i: costs[i], seed=seed)
+    res0 = compose(len(zoo), f_a, f_l0, slo,
+                   compose_params or ComposerParams(N=6, M=80, K=4,
+                                                    N0=10, seed=seed))
+    family = _ladder_from(res0, costs)
+    lanes = {t: _DesLadder(res0.b_star) for t in tiers}
+    for lane in lanes.values():
+        lane.set_ladder(family)
+    telemetry = TieredTelemetry(
+        tier_of=lambda p: tiers[0], tiers=tiers, slo_seconds=slo,
+        window_seconds=epoch_seconds, clock=lambda: 0.0)
+    ctl = TieredController(
+        telemetry, lanes, tier_order=tiers,
+        config=TieredControllerConfig(slo_seconds=slo,
+                                      cooldown_seconds=0.0,
+                                      min_samples=10, rho_max=rho_max),
+        cost_fn=lambda sel: float(costs[np.asarray(sel, bool)].sum()),
+        n_devices=n_devices)
+
+    records: List[Dict] = []
+    carry_ages, carry_tiers = np.asarray([]), []
+    for e, census in enumerate(epochs):
+        tier_costs = {
+            t: list(costs[lanes[t].active_selector.astype(bool)])
+            for t in tiers}
+        r = simulate(tier_costs, SimConfig(
+            n_patients=census, n_devices=n_devices,
+            window_seconds=window_seconds,
+            duration_seconds=epoch_seconds, seed=seed + 17 * e,
+            carry_backlog=True, tiers=fracs,
+            escalate_hazard=escalate_hazard),
+            backlog=carry_ages, backlog_tiers=carry_tiers)
+        t0 = e * epoch_seconds
+        for q in r.queries:
+            if q.t_window >= 0:    # backlog arrivals were recorded
+                telemetry.record_arrival(t0 + q.t_window, tier=q.tier)
+            telemetry.record_served(
+                q.latency, t0 + min(q.t_done, epoch_seconds),
+                tier=q.tier)
+        for age, tr in zip(r.backlog, r.backlog_tiers):
+            if age <= epoch_seconds:   # born here, served next epoch
+                telemetry.record_arrival(t0 + epoch_seconds - age,
+                                         tier=tr)
+        per: Dict[str, Dict] = {}
+        for t in tiers:
+            qs = [q for q in r.queries if q.tier == t]
+            lat = np.asarray([q.latency for q in qs])
+            bl_in = sum(1 for x in carry_tiers if x == t)
+            bl_out = sum(1 for x in r.backlog_tiers if x == t)
+            sel_t = lanes[t].active_selector
+            per[t] = {
+                "rung": lanes[t].ladder_pos,
+                "n_members": int(sel_t.sum()),
+                "accuracy": float(f_a(sel_t)),
+                "served": len(qs),
+                "backlog_in": bl_in, "backlog_out": bl_out,
+                "born": len(qs) + bl_out - bl_in,
+                "p99_s": float(np.percentile(lat, 99))
+                if len(lat) else 0.0,
+                "violation_rate": float(np.mean(lat > slo))
+                if len(lat) else 0.0}
+        lat_all = r.latencies()
+        rec = {"epoch": e, "t0_s": t0, "census": census,
+               "served": len(r.queries),
+               "born": len(r.queries) + len(r.backlog)
+               - len(carry_tiers),
+               "p50_s": r.p(50), "p99_s": r.p(99),
+               "violation_rate": float(np.mean(lat_all > slo))
+               if len(lat_all) else 0.0,
+               "escalations": sum(1 for x in r.tier_log if x[2]),
+               "tiers": per}
+        carry_ages, carry_tiers = r.backlog, list(r.backlog_tiers)
+        actions = ctl.step(now=(e + 1) * epoch_seconds)
+        rec["decisions"] = [f"{d.value}:{t}" for d, t in actions]
+        records.append(rec)
+        if verbose:
+            rungs = "/".join(str(per[t]["rung"]) for t in tiers)
+            print(f"  [tier] epoch {e} census {census:3d} "
+                  f"rungs {rungs} p99 {rec['p99_s']:7.3f}s "
+                  f"viol {rec['violation_rate']:.2f} "
+                  f"crit-viol {per[tiers[-1]]['violation_rate']:.2f}"
+                  + (f" -> {','.join(rec['decisions'])}"
+                     if rec["decisions"] else ""))
+
+    per_tier: Dict[str, Dict] = {}
+    for t in tiers:
+        served = sum(r["tiers"][t]["served"] for r in records)
+        viol = sum(r["tiers"][t]["violation_rate"]
+                   * r["tiers"][t]["served"] for r in records)
+        per_tier[t] = {
+            "served": served,
+            "born": sum(r["tiers"][t]["born"] for r in records),
+            "final_backlog": sum(1 for x in carry_tiers if x == t),
+            "violation_rate": viol / max(served, 1),
+            "mean_accuracy": float(np.mean(
+                [r["tiers"][t]["accuracy"] for r in records])),
+            "final_rung": records[-1]["tiers"][t]["rung"],
+            "min_rung": min(r["tiers"][t]["rung"] for r in records)}
+    served_total = sum(r["served"] for r in records)
+    return {"tier_fracs": fracs, "escalate_hazard": escalate_hazard,
+            "rho_max": rho_max, "slo_s": slo,
+            "epochs": records, "per_tier": per_tier,
+            "served_total": served_total,
+            "born_total": sum(r["born"] for r in records),
+            "final_backlog": len(carry_tiers),
+            # the conservation identity the acceptance tracks: per-tier
+            # served sums to the fleet total, and per-tier born balances
+            # served + final backlog
+            "per_tier_served_sum": sum(
+                v["served"] for v in per_tier.values()),
+            "initial_selector": np.flatnonzero(res0.b_star).tolist(),
+            "ladder_sizes": [int(s.sum()) for s in family],
+            "actions": [(t, tier, d.value) for t, tier, d in ctl.log]}
+
+
 def wallclock_hot_swap(n_queries: int = 48, n_swaps: int = 3,
                        input_len: int = 250, pool: Sequence = None,
                        sel_a: np.ndarray = None, sel_b: np.ndarray = None,
@@ -296,8 +443,19 @@ def bench_adaptive(slo: float = 1.0, n1: int = 24,
               f"SLO {slo:.1f}s):")
     static = run_adaptive_sim(adaptive=False, **common)
     adaptive = run_adaptive_sim(adaptive=True, **common)
+    tiered = run_tiered_sim(zoo=zoo, costs=costs, f_a=f_a, slo=slo,
+                            schedule=schedule, seed=seed,
+                            verbose=verbose)
+    # the headline comparison: the critical tier must do no worse than
+    # the PR 2 global adaptive ladder (which degrades EVERY bed alike)
+    # while only low-acuity rungs absorb the shed
+    tiered["global_adaptive_violation_rate"] = \
+        adaptive["violation_rate"]
+    crit = list(tiered["tier_fracs"])[-1]
+    tiered["critical_violation_rate"] = \
+        tiered["per_tier"][crit]["violation_rate"]
     out = {"slo_s": slo, "schedule": [list(s) for s in schedule],
-           "static": static, "adaptive": adaptive}
+           "static": static, "adaptive": adaptive, "tiered": tiered}
     if wallclock:
         out["wallclock_swap"] = wallclock_hot_swap(verbose=verbose)
     if verbose:
@@ -309,6 +467,14 @@ def bench_adaptive(slo: float = 1.0, n1: int = 24,
               f"mean acc {adaptive['mean_accuracy']:.3f}  "
               f"({adaptive['n_recomposes']} recomposes, "
               f"{len(adaptive['actions'])} actions)")
+        pt = tiered["per_tier"]
+        print(f"  tiered  : crit viol "
+              f"{tiered['critical_violation_rate']:.2f} "
+              f"(global adaptive {adaptive['violation_rate']:.2f})  "
+              f"crit acc {pt[crit]['mean_accuracy']:.3f}  "
+              f"stable min rung "
+              f"{pt[list(tiered['tier_fracs'])[0]]['min_rung']}  "
+              f"{len(tiered['actions'])} tier actions")
     if write_json:
         with open(BENCH_JSON, "w") as f:
             json.dump(out, f, indent=2)

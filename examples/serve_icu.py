@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--adaptive", action="store_true",
                     help="run the online control plane against a "
                          "census spike (beds tripling mid-run)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="run the per-acuity-tier control plane: "
+                         "stable beds shed first under the spike, "
+                         "critical beds hold the rich ensemble")
     args = ap.parse_args()
 
     zoo, extras = build_zoo(n_patients=16, clips=8, steps=120)
@@ -100,6 +104,29 @@ def main():
           f"({(svc.dispatch_count - d0) / max(stats.served, 1):.2f}"
           f"/query; mean batch "
           f"{srv.batcher.stats.mean_batch:.1f})")
+
+    if args.tiered:
+        # per-acuity-tier degradation: the same spike, but the unit of
+        # actuation is a TIER — stable beds shed first (and climb
+        # last), critical beds keep the composed rich ensemble
+        from benchmarks.adaptive_bench import run_tiered_sim
+        schedule = [(3, args.beds), (4, 3 * args.beds), (3, args.beds)]
+        print(f"\ntiered control plane (census "
+              f"{' -> '.join(str(c) for _, c in schedule)}, "
+              f"SLO {budget * 1000:.0f} ms):")
+        td = run_tiered_sim(zoo=zoo, costs=extras["measured_costs"],
+                            f_a=f_a, slo=budget, schedule=schedule,
+                            n_devices=args.devices, verbose=True)
+        crit = list(td["tier_fracs"])[-1]
+        stab = list(td["tier_fracs"])[0]
+        print(f"  critical: viol "
+              f"{td['per_tier'][crit]['violation_rate']:.2f}  "
+              f"acc {td['per_tier'][crit]['mean_accuracy']:.3f}  "
+              f"min rung {td['per_tier'][crit]['min_rung']}")
+        print(f"  stable  : viol "
+              f"{td['per_tier'][stab]['violation_rate']:.2f}  "
+              f"acc {td['per_tier'][stab]['mean_accuracy']:.3f}  "
+              f"min rung {td['per_tier'][stab]['min_rung']}")
 
     if not args.adaptive:
         return

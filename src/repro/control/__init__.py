@@ -7,12 +7,26 @@ and the online empirical arrival curve; ``controller`` turns those
 signals into actions (degradation-ladder shed/climb, background
 recomposition); ``swap`` pre-stages selector services and hot-swaps
 them atomically between micro-batch flushes with zero dropped queries.
+
+``tiers`` lifts the unit of actuation from the fleet to the acuity
+TIER: per-tier (selector, placement) lanes over a shared staging cache
+(``TieredEnsemble``), per-tier telemetry slices (``TieredTelemetry``),
+and a priority-aware shed/climb policy (``TieredController``) under
+which stable beds shed first and critical beds hold the rich ensemble
+until the predicted bound leaves no alternative.
 """
 from repro.control.controller import (AdaptiveController, ControllerConfig,
-                                      Decision)
-from repro.control.swap import HotSwapper, SelectorLadder, SwappableService
-from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+                                      Decision, TieredController,
+                                      TieredControllerConfig)
+from repro.control.swap import (HotSwapper, SelectorLadder, StagingCache,
+                                SwappableService)
+from repro.control.telemetry import (SloTelemetry, TelemetrySnapshot,
+                                     TieredTelemetry)
+from repro.control.tiers import TIER_ORDER, TieredEnsemble, TierRegistry
 
 __all__ = ["AdaptiveController", "ControllerConfig", "Decision",
-           "HotSwapper", "SelectorLadder", "SwappableService",
-           "SloTelemetry", "TelemetrySnapshot"]
+           "TieredController", "TieredControllerConfig",
+           "HotSwapper", "SelectorLadder", "StagingCache",
+           "SwappableService", "SloTelemetry", "TelemetrySnapshot",
+           "TieredTelemetry", "TIER_ORDER", "TieredEnsemble",
+           "TierRegistry"]

@@ -30,6 +30,14 @@ hot path never blocks on the search; the DES bench and unit tests use
 ``sync=True`` for determinism.  ``recompose_fn(snapshot)`` is injected:
 it returns the new selector (or None to keep the incumbent) and may
 also rebuild the ladder around it.
+
+``TieredController`` lifts the same signals to per-acuity-tier
+actuation: the fleet shares one device pool, so overload/health is read
+fleet-wide, but the ACTION lands on one tier's ladder — stable beds
+shed first and climb last, and the critical tier holds the rich
+ensemble until the predicted capacity bound says even flooring every
+lower tier cannot restore feasibility.  A cross-tier device budget
+(``rho_max``) keeps one tier's climb from eating another's headroom.
 """
 from __future__ import annotations
 
@@ -37,11 +45,11 @@ import dataclasses
 import enum
 import threading
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.control.swap import SelectorLadder
+from repro.control.swap import SelectorLadder, rungs_monotone
 from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
 from repro.serving.placement import placement_signature
 
@@ -302,3 +310,213 @@ class AdaptiveController:
         t = self._replace_thread
         if t is not None:
             t.join(timeout=5.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredControllerConfig(ControllerConfig):
+    # cross-tier device budget: predicted utilization
+    # rho = sum_t lambda_t * c_t / n_devices above this is treated as
+    # overload (shed pre-emptively) and no climb may push rho past it —
+    # the guard that keeps a stable-tier climb from eating the critical
+    # tier's headroom
+    rho_max: float = 0.85
+    # shed at most this many rungs per control step when the PREDICTED
+    # budget says one rung is not enough (e.g. floor the stable tier in
+    # one actuation during a census spike); observed-only overload
+    # (no cost model) always sheds a single rung
+    max_sheds_per_step: int = 4
+
+
+class TieredController:
+    """Priority-aware per-tier shed/climb over a fixed ladder family.
+
+    One control step reads the FLEET snapshot (all tiers share the
+    device pool, so violations and queueing are fleet phenomena) plus
+    per-tier arrival rates, and actuates ONE tier's ladder:
+
+    * overload (observed violations / p99 / sheds, or predicted budget
+      ``rho > rho_max``) — shed the LOWEST-priority tier that still
+      can; the top (critical) tier sheds only when every lower tier is
+      at its floor AND the predicted bound leaves no alternative
+      (even lower tiers floored, ``rho >= 1``: the backlog would grow
+      without bound, so T_s + T_q crosses any SLO) — or queries are
+      already being dropped (``n_shed > 0``);
+    * health (violations low, p99 under headroom) — climb the
+      HIGHEST-priority tier first, gated by the budget (post-climb
+      ``rho <= rho_max``) and by shed-order monotonicity (a tier never
+      climbs past the rung of a higher-acuity tier);
+    * otherwise hold.
+
+    ``lanes`` maps tier -> ``SelectorLadder`` (a ``TieredEnsemble``'s
+    lanes, or no-op DES ladders in the bench); ``tier_order`` is
+    shed-first -> shed-last.  ``cost_fn(selector)`` returns device-
+    seconds per query for a selector — with it the controller predicts
+    rho; without it only observed signals act.  The shed-order invariant
+    (monotone rungs along ``tier_order``) is re-established on every
+    step and preserved by every action this controller takes.
+    """
+
+    def __init__(self, telemetry, lanes,
+                 tier_order: Optional[Sequence[str]] = None,
+                 config: Optional[TieredControllerConfig] = None,
+                 cost_fn: Optional[
+                     Callable[[np.ndarray], float]] = None,
+                 n_devices: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
+        self.telemetry = telemetry
+        self.lanes = dict(lanes)
+        order = tuple(tier_order) if tier_order is not None \
+            else tuple(getattr(telemetry, "tiers", ()))
+        if not order:
+            order = tuple(self.lanes)
+        if set(order) != set(self.lanes):
+            raise ValueError(f"tier_order {order} != lanes "
+                             f"{tuple(self.lanes)}")
+        self.order = order
+        tel_slo = getattr(telemetry, "slo", None)
+        if config is None:
+            config = TieredControllerConfig(
+                slo_seconds=tel_slo if tel_slo is not None else 1.0)
+        elif tel_slo is not None \
+                and abs(config.slo_seconds - tel_slo) > 1e-12:
+            # violation_rate is computed by telemetry against ITS slo;
+            # decide() compares p99 against the config's — mixed
+            # thresholds would make the two overload signals contradict
+            raise ValueError(
+                f"config.slo_seconds={config.slo_seconds} != "
+                f"telemetry.slo={tel_slo}")
+        self.config = config
+        self.cost_fn = cost_fn
+        self.n_devices = max(1, n_devices)
+        self.clock = clock
+        self.log: List[Tuple[float, str, Decision]] = []
+        self._last_action_t = -float("inf")
+
+    # ---------------------------------------------------------- reading
+    def rungs(self) -> dict:
+        return {t: self.lanes[t].ladder_pos for t in self.order}
+
+    def monotone(self) -> bool:
+        return rungs_monotone(self.lanes, self.order)
+
+    def _rho(self, rates, floor_below: Optional[str] = None) -> float:
+        """Predicted device utilization.  ``floor_below=t`` prices every
+        tier BELOW t at its ladder-floor cost — the 'no alternative'
+        probe: would flooring all lower tiers restore feasibility?"""
+        if self.cost_fn is None:
+            return float("nan")
+        work = 0.0
+        below = set()
+        if floor_below is not None:
+            below = set(self.order[:self.order.index(floor_below)])
+        for t in self.order:
+            lane = self.lanes[t]
+            if t in below and lane.ladder:
+                sel = lane.ladder[0]
+            else:
+                sel = lane.active_selector
+            work += rates.get(t, 0.0) * float(self.cost_fn(sel))
+        return work / self.n_devices
+
+    def _climb_ok(self, tier: str, rates) -> bool:
+        """Budget + monotonicity gate for climbing ``tier`` one rung."""
+        lane = self.lanes[tier]
+        if not lane.can_climb():
+            return False
+        new_pos = lane.ladder_pos + 1
+        for higher in self.order[self.order.index(tier) + 1:]:
+            if new_pos > self.lanes[higher].ladder_pos:
+                return False          # would out-rank a higher tier
+        if self.cost_fn is not None:
+            rungs = lane.ladder
+            delta = rates.get(tier, 0.0) * (
+                float(self.cost_fn(rungs[new_pos]))
+                - float(self.cost_fn(lane.active_selector)))
+            if self._rho(rates) + delta / self.n_devices \
+                    > self.config.rho_max:
+                return False          # climb would eat shared headroom
+        return True
+
+    # ----------------------------------------------------------- policy
+    def decide(self, fleet: TelemetrySnapshot,
+               rates: dict) -> Tuple[Decision, Optional[str]]:
+        """Pure policy: (decision, tier) for the current evidence."""
+        c = self.config
+        if fleet.n_served < c.min_samples:
+            return Decision.HOLD, None
+        rho = self._rho(rates)
+        observed = (fleet.violation_rate >= c.violation_high
+                    or fleet.p99 > c.slo_seconds or fleet.n_shed > 0)
+        predicted = np.isfinite(rho) and rho > c.rho_max
+        if observed or predicted:
+            for t in self.order[:-1]:          # stable beds shed first
+                if self.lanes[t].can_shed():
+                    return Decision.SHED, t
+            top = self.order[-1]
+            if self.lanes[top].can_shed() and self._no_alternative(
+                    fleet, rates):
+                return Decision.SHED, top
+            return Decision.HOLD, None
+        if (fleet.violation_rate <= c.violation_low
+                and fleet.p99 <= c.headroom_frac * c.slo_seconds):
+            for t in reversed(self.order):     # critical climbs first
+                if self._climb_ok(t, rates):
+                    return Decision.CLIMB, t
+        return Decision.HOLD, None
+
+    def _no_alternative(self, fleet: TelemetrySnapshot,
+                        rates: dict) -> bool:
+        """May the top tier shed?  Only when the predicted bound says
+        flooring every lower tier still cannot restore feasibility
+        (rho >= 1 with lower tiers priced at their floors — queueing
+        would diverge, so predicted T_s + T_q crosses any SLO), or
+        queries are already being dropped."""
+        if fleet.n_shed > 0:
+            return True
+        rho_floor = self._rho(rates, floor_below=self.order[-1])
+        if np.isfinite(rho_floor):
+            return rho_floor >= 1.0
+        # no cost model: observed overload with every lower tier at its
+        # floor (decide() only reaches here in that state) must still
+        # be actionable
+        return (fleet.violation_rate >= self.config.violation_high
+                or fleet.p99 > self.config.slo_seconds)
+
+    # -------------------------------------------------------------- act
+    def step(self, now: Optional[float] = None
+             ) -> List[Tuple[Decision, str]]:
+        """One control iteration; returns the (decision, tier) actions
+        taken (empty == hold).  When the predicted budget is the
+        overload signal, shedding repeats (priority order, up to
+        ``max_sheds_per_step``) until rho fits — one census spike can
+        floor the stable tier in a single actuation instead of bleeding
+        a rung per step."""
+        now = self.clock() if now is None else now
+        if now - self._last_action_t < self.config.cooldown_seconds:
+            return []
+        since = self._last_action_t \
+            if np.isfinite(self._last_action_t) else None
+        fleet = self.telemetry.snapshot(now=now, since=since)
+        rates = {t: self.telemetry.tier_snapshot(
+            t, now=now, since=since).arrival_rate for t in self.order}
+        actions: List[Tuple[Decision, str]] = []
+        for _ in range(max(1, self.config.max_sheds_per_step)):
+            decision, tier = self.decide(fleet, rates)
+            if decision is Decision.HOLD or tier is None:
+                break
+            acted = self.lanes[tier].shed() \
+                if decision is Decision.SHED else self.lanes[tier].climb()
+            if not acted:
+                break
+            self.log.append((now, tier, decision))
+            actions.append((decision, tier))
+            if decision is Decision.CLIMB:
+                break                  # climbs are always one at a time
+            rho = self._rho(rates)
+            if not np.isfinite(rho):
+                break                  # observed-only: single shed
+            if rho <= self.config.rho_max:
+                break                  # budget restored: stop shedding
+        if actions:
+            self._last_action_t = now
+        return actions

@@ -22,6 +22,13 @@ placement)`` PAIRS — the selector's stacked bucket params sharded
 across devices per an LPT plan over measured bucket costs — and
 ``re_place`` re-derives the plan from freshly measured costs and swaps
 it in under the SAME selector (the controller's RE-PLACE action).
+
+Tiered serving shares one ``StagingCache`` across many ladders (one
+lane per acuity tier, ``control.tiers.TieredEnsemble``): two tiers
+standing on the same (selector, placement) pair serve through the SAME
+staged service — one param stack, one warmed dispatch set — and
+eviction keeps every lane's active pair pinned, so tier A churning
+through novel pairs can never evict tier B's live service.
 """
 from __future__ import annotations
 
@@ -31,6 +38,58 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.placement import Placement, placement_signature
+
+
+class StagingCache:
+    """Shared (selector, placement)-keyed staging state for one or more
+    ``HotSwapper`` lanes over the same member pool.
+
+    Holds the staged-service / measurement-service / derived-placement
+    caches plus the locks that guard them, and a per-lane PIN of each
+    lane's active composite key.  Eviction (``HotSwapper._evict_stale``)
+    computes its keep-set across ALL registered lanes — actives via the
+    pins, ladder rungs by reading each lane's rung list — so a
+    multi-tier deployment staging T tiers x R rungs reuses identical
+    pairs instead of duplicating them, and no lane's churn can evict
+    another lane's live pair.
+    """
+
+    def __init__(self):
+        self.lock = threading.Lock()       # guards the cache dicts + pins
+        self.build_lock = threading.Lock()  # serializes expensive builds
+        self.staged: Dict[bytes, object] = {}
+        self.measure: Dict[bytes, object] = {}
+        self.placements: Dict[bytes, Optional[Placement]] = {}
+        self.lanes: List["HotSwapper"] = []
+        self.pins: Dict[int, bytes] = {}   # id(lane) -> active pair key
+
+    def register(self, lane: "HotSwapper") -> None:
+        with self.lock:
+            self.lanes.append(lane)
+
+    def unregister(self, lane: "HotSwapper") -> None:
+        """Retire a lane (e.g. a tier being rebuilt on the shared
+        cache): drop its pin and stop counting its active/ladder in
+        eviction keep-sets — without this a dead lane's staged services
+        would be retained forever."""
+        with self.lock:
+            self.lanes = [l for l in self.lanes if l is not lane]
+            self.pins.pop(id(lane), None)
+
+    def pin(self, lane: "HotSwapper", key: bytes) -> None:
+        with self.lock:
+            self.pins[id(lane)] = key
+
+
+def rungs_monotone(lanes, order) -> bool:
+    """The shed-order invariant: every lane on-ladder, rung positions
+    non-decreasing along ``order`` (shed-first -> shed-last) — a stable
+    bed is never on a richer rung than a critical bed.  Shared by
+    ``control.tiers.TieredEnsemble`` and the tiered controller so the
+    two can never disagree about what monotone means."""
+    pos = [lanes[t].ladder_pos for t in order]
+    return all(p >= 0 for p in pos) and all(
+        a <= b for a, b in zip(pos, pos[1:]))
 
 
 class SwappableService:
@@ -158,7 +217,8 @@ class HotSwapper(SelectorLadder):
                  devices: Optional[Sequence] = None,
                  placement_fn: Optional[
                      Callable[[np.ndarray], Placement]] = None,
-                 cost_reps: int = 3):
+                 cost_reps: int = 3,
+                 staging: Optional[StagingCache] = None):
         super().__init__(initial_selector)
         self.pool = list(pool)
         self.vitals_model = vitals_model
@@ -174,13 +234,21 @@ class HotSwapper(SelectorLadder):
         self.placement_fn = placement_fn
         self.cost_reps = cost_reps
         self.active_placement: Optional[Placement] = None
-        self._placements: Dict[bytes, Optional[Placement]] = {}
-        self._measure_cache: Dict[bytes, object] = {}
-        self._staged: Dict[bytes, object] = {}
-        self._stage_lock = threading.Lock()    # guards the cache dicts
-        self._build_lock = threading.Lock()    # serializes builds
+        # staging may be SHARED between lanes (per-acuity-tier ladders
+        # over one pool): identical (selector, placement) pairs then
+        # resolve to one staged service, and eviction is pin-aware
+        # across every lane registered on the cache
+        self._staging = staging if staging is not None else StagingCache()
+        self._staging.register(self)
+        self._placements = self._staging.placements
+        self._measure_cache = self._staging.measure
+        self._staged = self._staging.staged
+        self._stage_lock = self._staging.lock
+        self._build_lock = self._staging.build_lock
         self.facade = SwappableService(self.stage(initial_selector))
         self.active_placement = self.placement_for(initial_selector)
+        self._staging.pin(self, self._skey(self.active_selector,
+                                           self.active_placement))
 
     @property
     def sharded(self) -> bool:
@@ -282,6 +350,7 @@ class HotSwapper(SelectorLadder):
         pl = self.placement_for(selector)
         self.facade.swap(self.stage(selector, pl))
         self.active_placement = pl
+        self._staging.pin(self, self._skey(selector, pl))
         self._evict_stale(selector)
 
     def re_place(self, placement: Optional[Placement] = None) -> bool:
@@ -311,6 +380,7 @@ class HotSwapper(SelectorLadder):
                 self._placements[np.asarray(sel, np.int8).tobytes()] = pl
             self.facade.swap(svc)
             self.active_placement = pl
+            self._staging.pin(self, self._skey(sel, pl))
             self._evict_stale(sel)
             return True
 
@@ -321,16 +391,33 @@ class HotSwapper(SelectorLadder):
         stacked param copies + compiled dispatch fns — without eviction
         a long-running deployment leaks until OOM.  (A service still
         finishing an in-flight flush stays alive via the flush's
-        reference.)"""
+        reference.)
+
+        With a SHARED staging cache the keep-set spans every registered
+        lane: each lane's active pair via its pin (the pin carries the
+        exact composite key, so a lane whose recorded placement for a
+        selector was refreshed by ANOTHER lane's re-derivation keeps its
+        live pair regardless), plus every lane's ladder rungs.  Other
+        lanes' rung lists are read without their swap locks — they are
+        replaced wholesale under set_ladder, and a stale read can only
+        over-retain for one cycle, never evict a pinned active."""
         with self._swap_lock:
             rungs = [np.asarray(active, np.int8)] + list(self._ladder)
+        for lane in list(self._staging.lanes):
+            if lane is self:
+                continue
+            rungs.append(np.asarray(lane.active_selector, np.int8))
+            rungs.extend(list(lane._ladder))
         with self._stage_lock:
             keep = {s.tobytes() + b"|"
                     + placement_signature(self._placements.get(
                         s.tobytes())) for s in rungs}
+            keep |= set(self._staging.pins.values())
             for k in [k for k in self._staged if k not in keep]:
                 del self._staged[k]
             keep_sel = {s.tobytes() for s in rungs}
+            keep_sel |= {k.split(b"|", 1)[0]
+                         for k in self._staging.pins.values()}
             for k in [k for k in self._measure_cache
                       if k not in keep_sel]:
                 del self._measure_cache[k]

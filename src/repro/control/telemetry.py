@@ -17,6 +17,18 @@ it derives:
 All mutations and reads are lock-guarded; ``snapshot()`` is the
 consistent view the controller consumes.  The clock is injectable so
 the DES and unit tests can drive virtual time.
+
+Memory is O(window), never O(trace): every ``record_*`` prunes events
+older than the sliding window against the HIGH-WATER-MARK timestamp
+(monotone even when explicit, slightly out-of-order times are fed), so
+a week-long deployment holds only the last ``window_seconds`` of raw
+timestamps.  (The ROADMAP's next increment replaces even that with a
+mergeable windowed-count sketch.)
+
+``TieredTelemetry`` adds the per-acuity-tier dimension: one fleet-wide
+``SloTelemetry`` plus one slice per tier, routed by the patient id every
+query already carries (``tier_of``) or by an explicit ``tier=`` — the
+sensor side of per-tier degradation ladders (``control.tiers``).
 """
 from __future__ import annotations
 
@@ -24,7 +36,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, Deque, Optional, Tuple
+from typing import Callable, Deque, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -68,35 +80,57 @@ class SloTelemetry:
         self._served: Deque[Tuple[float, float]] = collections.deque()
         self._shed: Deque[float] = collections.deque()
         self._t0: Optional[float] = None       # first event ever seen
+        self._hwm = -float("inf")              # newest event time seen
 
     # ------------------------------------------------------------ feed
-    def record_arrival(self, t: Optional[float] = None) -> None:
+    def record_arrival(self, t: Optional[float] = None,
+                       patient: Optional[int] = None) -> None:
+        """``patient`` is accepted (and ignored) so the server tap can
+        pass query ids uniformly; ``TieredTelemetry`` routes on it."""
         t = self.clock() if t is None else t
         with self._lock:
             self._note_t0(t)
-            self._arrivals.append(t)
+            if self._in_window(t):
+                self._arrivals.append(t)
             self._prune(t)        # amortized O(1): memory stays O(window)
 
     def record_served(self, latency: float,
-                      t: Optional[float] = None) -> None:
+                      t: Optional[float] = None,
+                      patient: Optional[int] = None) -> None:
         t = self.clock() if t is None else t
         with self._lock:
             self._note_t0(t)
-            self._served.append((t, float(latency)))
+            if self._in_window(t):
+                self._served.append((t, float(latency)))
             self._prune(t)
 
-    def record_shed(self, t: Optional[float] = None) -> None:
+    def record_shed(self, t: Optional[float] = None,
+                    patient: Optional[int] = None) -> None:
         t = self.clock() if t is None else t
         with self._lock:
             self._note_t0(t)
-            self._shed.append(t)
+            if self._in_window(t):
+                self._shed.append(t)
             self._prune(t)
 
     def _note_t0(self, t: float) -> None:
         if self._t0 is None:
             self._t0 = t
 
+    def _in_window(self, t: float) -> bool:
+        # an event already older than the window behind the high-water
+        # mark is rejected at RECORD time: appending it at the deque
+        # tail would dodge the left-side prune (the deques are only
+        # approximately sorted) and skew counts/rates for up to a full
+        # window while occupying memory
+        return t > self._hwm - self.window
+
     def _prune(self, now: float) -> None:
+        # prune against the high-water mark, not the raw event time: a
+        # slightly out-of-order feed (threaded taps, DES replay) must
+        # never let the cut regress — the deques stay bounded by the
+        # window behind the NEWEST event, i.e. memory is O(window)
+        self._hwm = now = max(self._hwm, now)
         cut = now - self.window
         for dq in (self._arrivals, self._shed):
             while dq and dq[0] <= cut:
@@ -183,3 +217,89 @@ class SloTelemetry:
             tq_bound=tq,
             placement_imbalance=float(imbalance)
             if imbalance is not None else float("nan"))
+
+
+class TieredTelemetry:
+    """Per-acuity-tier telemetry: a fleet-wide ``SloTelemetry`` plus one
+    slice per tier, fed through the same server-tap interface.
+
+    Routing: an explicit ``tier=`` wins (DES replay stamps each query's
+    tier at birth); otherwise ``tier_of(patient)`` maps the patient id
+    the query carries; unknown/unmappable patients land in
+    ``default_tier``.  A patient whose acuity escalates mid-stay starts
+    feeding its NEW slice from that moment — its history stays where it
+    was observed.
+
+    ``snapshot`` is the fleet view (what overload/health decisions key
+    on, since all tiers share the device pool); ``tier_snapshot`` is one
+    slice (per-tier p99/violations/arrival rate — the priority-aware
+    controller's evidence for which tier absorbs a shed).
+    """
+
+    def __init__(self, tier_of: Callable[[int], str],
+                 tiers: Sequence[str],
+                 slo_seconds: float = 1.0,
+                 window_seconds: float = 60.0,
+                 default_tier: Optional[str] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if not tiers:
+            raise ValueError("tiers must be non-empty")
+        self.tiers = tuple(tiers)
+        self.tier_of = tier_of
+        self.default_tier = default_tier if default_tier is not None \
+            else self.tiers[0]
+        if self.default_tier not in self.tiers:
+            raise ValueError(f"default_tier {self.default_tier!r} not in "
+                             f"{self.tiers}")
+        self.slo = slo_seconds
+        self.window = window_seconds
+        self.clock = clock
+        self.fleet = SloTelemetry(slo_seconds, window_seconds, clock)
+        self.slices: Dict[str, SloTelemetry] = {
+            t: SloTelemetry(slo_seconds, window_seconds, clock)
+            for t in self.tiers}
+
+    def _slice(self, patient: Optional[int],
+               tier: Optional[str]) -> SloTelemetry:
+        if tier is None and patient is not None:
+            try:
+                tier = self.tier_of(patient)
+            except Exception:
+                tier = None
+        if tier not in self.slices:
+            tier = self.default_tier
+        return self.slices[tier]
+
+    # ------------------------------------------------------- server tap
+    def record_arrival(self, t: Optional[float] = None,
+                       patient: Optional[int] = None,
+                       tier: Optional[str] = None) -> None:
+        t = self.clock() if t is None else t
+        self.fleet.record_arrival(t)
+        self._slice(patient, tier).record_arrival(t)
+
+    def record_served(self, latency: float, t: Optional[float] = None,
+                      patient: Optional[int] = None,
+                      tier: Optional[str] = None) -> None:
+        t = self.clock() if t is None else t
+        self.fleet.record_served(latency, t)
+        self._slice(patient, tier).record_served(latency, t)
+
+    def record_shed(self, t: Optional[float] = None,
+                    patient: Optional[int] = None,
+                    tier: Optional[str] = None) -> None:
+        t = self.clock() if t is None else t
+        self.fleet.record_shed(t)
+        self._slice(patient, tier).record_shed(t)
+
+    # ------------------------------------------------------------ read
+    def tier(self, name: str) -> SloTelemetry:
+        return self.slices[name]
+
+    def snapshot(self, **kwargs) -> TelemetrySnapshot:
+        """Fleet-wide reading (same signature as
+        ``SloTelemetry.snapshot``)."""
+        return self.fleet.snapshot(**kwargs)
+
+    def tier_snapshot(self, name: str, **kwargs) -> TelemetrySnapshot:
+        return self.slices[name].snapshot(**kwargs)

@@ -360,6 +360,42 @@ class EnsembleService:
         return out
 
 
+class TierRouter:
+    """Routes each query through its acuity tier's service (the data-
+    plane face of per-tier degradation ladders).
+
+    ``services`` maps tier -> anything with ``predict``/``predict_batch``
+    (plain ``EnsembleService``s, or ``SwappableService`` facades when the
+    control plane hot-swaps per-tier pairs underneath).  Batches must be
+    tier-homogeneous — the tier-keyed batcher upstream
+    (``serving.queues.KeyedMicroBatcher``) guarantees that — so one
+    flush is always answered by exactly one tier's selector.
+    """
+
+    def __init__(self, services: Dict[str, object],
+                 default: Optional[str] = None):
+        if not services:
+            raise ValueError("services must be non-empty")
+        self.services = dict(services)
+        self.default = default if default is not None \
+            else next(iter(self.services))
+        if self.default not in self.services:
+            raise ValueError(f"default {self.default!r} not in "
+                             f"{tuple(self.services)}")
+
+    def service(self, tier: Optional[str] = None):
+        return self.services[tier if tier in self.services
+                             else self.default]
+
+    def predict(self, windows: Dict[str, np.ndarray],
+                tier: Optional[str] = None) -> float:
+        return self.service(tier).predict(windows)
+
+    def predict_batch(self, batch: Sequence[Dict[str, np.ndarray]],
+                      tier: Optional[str] = None) -> List[float]:
+        return self.service(tier).predict_batch(batch)
+
+
 @dataclasses.dataclass
 class ServedQuery:
     patient: int
@@ -373,13 +409,20 @@ class ServedQuery:
 
 
 class StreamingPipeline:
-    """Stateful aggregators + the ensemble service, driven by a stream."""
+    """Stateful aggregators + the ensemble service, driven by a stream.
 
-    def __init__(self, service: EnsembleService, n_patients: int,
-                 window_seconds: float = float(CLIP_SECONDS)):
+    With ``tier_of`` (patient -> acuity tier) the service must be
+    tier-routing (``TierRouter`` / ``control.tiers.TieredEnsemble``):
+    each closed window is answered by the patient's CURRENT tier's
+    service."""
+
+    def __init__(self, service, n_patients: int,
+                 window_seconds: float = float(CLIP_SECONDS),
+                 tier_of: Optional[Callable[[int], str]] = None):
         mods = [ModalitySpec("ecg", ECG_HZ, 3),
                 ModalitySpec("vitals", VITALS_HZ, 7)]
         self.service = service
+        self.tier_of = tier_of
         self.aggs = [PatientAggregator(mods, window_seconds)
                      for _ in range(n_patients)]
         self.labs_cache: Dict[int, np.ndarray] = {}
@@ -398,7 +441,10 @@ class StreamingPipeline:
         if patient in self.labs_cache:
             windows["labs"] = self.labs_cache[patient]
         t0 = time.perf_counter()
-        score = self.service.predict(windows)
+        if self.tier_of is not None:
+            score = self.service.predict(windows, self.tier_of(patient))
+        else:
+            score = self.service.predict(windows)
         wall = time.perf_counter() - t0
         rec = ServedQuery(patient=patient, t_window=t, t_done=t + wall,
                           score=score)

@@ -2,6 +2,11 @@
 with waiting-time statistics for the latency profiler, plus the
 cross-patient ``MicroBatcher`` that coalesces ready windows into fused
 ensemble flushes (serving.pipeline.EnsembleService.predict_batch).
+
+``KeyedMicroBatcher`` is the tiered-serving variant: one coalescing
+lane per key (acuity tier), so a flush never mixes tiers — every
+micro-batch is served whole by ONE tier's (selector, placement)
+service while cross-patient amortisation still happens within a tier.
 """
 from __future__ import annotations
 
@@ -9,7 +14,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Deque, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -137,3 +142,89 @@ class MicroBatcher:
             self.stats.total_hold += sum(max(0.0, now - t)
                                          for t, _ in taken)
             return [item for _, item in taken]
+
+    def oldest(self) -> Optional[float]:
+        """Timestamp of the oldest pending item (None when empty)."""
+        with self._lock:
+            return self._q[0][0] if self._q else None
+
+
+# KeyedMicroBatcher.ready()'s "no lane is due" result: a sentinel, NOT
+# None — None is a legitimate lane key (the server's fallback when a
+# tier_of callback fails) and must remain poppable
+NO_LANE = object()
+
+
+class KeyedMicroBatcher:
+    """Per-key ``MicroBatcher`` lanes (one per acuity tier): coalescing
+    NEVER crosses keys, so every flush is served whole by one tier's
+    service.  Lanes are created on demand and share the clock and
+    flush knobs; ``ready()`` returns the due key whose oldest pending
+    item has waited longest (deterministic fairness: the tier closest
+    to its wait bound flushes first), or ``NO_LANE``.
+    """
+
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._lanes: "collections.OrderedDict[Any, MicroBatcher]" = \
+            collections.OrderedDict()
+
+    def lane(self, key: Any) -> MicroBatcher:
+        with self._lock:
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = MicroBatcher(max_batch=self.max_batch,
+                                    max_wait_ms=self.max_wait * 1000.0,
+                                    clock=self.clock)
+                self._lanes[key] = lane
+            return lane
+
+    def push(self, key: Any, item: Any,
+             t: Optional[float] = None) -> None:
+        self.lane(key).push(item, t)
+
+    def __len__(self) -> int:
+        with self._lock:
+            lanes = list(self._lanes.values())
+        return sum(len(l) for l in lanes)
+
+    def ready(self, now: Optional[float] = None) -> Optional[Any]:
+        now = self.clock() if now is None else now
+        with self._lock:
+            lanes = list(self._lanes.items())
+        due = []
+        for k, l in lanes:
+            oldest = l.oldest()       # read before ready(): a racing
+            if oldest is None:        # pop may empty the lane between
+                continue              # the two checks
+            if l.ready(now):
+                due.append((k, oldest))
+        if not due:
+            return NO_LANE
+        return min(due, key=lambda kv: (kv[1], str(kv[0])))[0]
+
+    def pop_batch(self, key: Any,
+                  now: Optional[float] = None) -> List[Any]:
+        return self.lane(key).pop_batch(now)
+
+    @property
+    def stats(self) -> MicroBatchStats:
+        """Aggregate over lanes (the server's reporting surface)."""
+        with self._lock:
+            lanes = list(self._lanes.values())
+        agg = MicroBatchStats()
+        for l in lanes:
+            agg.n_items += l.stats.n_items
+            agg.n_flushes += l.stats.n_flushes
+            agg.max_batch_seen = max(agg.max_batch_seen,
+                                     l.stats.max_batch_seen)
+            agg.total_hold += l.stats.total_hold
+        return agg
+
+    def lane_stats(self) -> "Dict[Any, MicroBatchStats]":
+        with self._lock:
+            return {k: l.stats for k, l in self._lanes.items()}

@@ -9,6 +9,15 @@ patients through a shared ``MicroBatcher`` (bounded by ``max_batch`` /
 With only a scalar ``handler`` they process queries one at a time as
 before.
 
+Tiered serving: with ``tier_of`` (patient id -> acuity tier, e.g.
+``control.tiers.TierRegistry.tier_of``) the batcher becomes tier-KEYED
+— cross-patient coalescing still happens, but only WITHIN a tier — and
+every flush is handed to ``batch_handler(windows, tier)`` (e.g.
+``control.tiers.TieredEnsemble.predict_batch``), so each query is
+served by exactly its tier's (selector, placement) service.  The
+telemetry tap always carries the patient id, so per-tier SLO slices
+(``control.telemetry.TieredTelemetry``) come for free.
+
 The DES simulator (simulator.py) is the deterministic twin used by the
 latency profiler and benchmarks; this server is the "really runs" path
 the examples exercise (real jitted inference, real clocks).
@@ -22,7 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.queues import MicroBatcher
+from repro.serving.queues import NO_LANE, KeyedMicroBatcher, MicroBatcher
 
 
 class ServerStats:
@@ -80,14 +89,23 @@ class EnsembleServer:
                  batch_handler: Optional[
                      Callable[[Sequence[Dict]], List[float]]] = None,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
-                 telemetry=None):
+                 telemetry=None,
+                 tier_of: Optional[Callable[[int], object]] = None):
         assert handler is not None or batch_handler is not None
         self.handler = handler
         self.batch_handler = batch_handler
         self.slo = slo_seconds
         self.q: "queue.Queue" = queue.Queue(maxsize=max_queue)
-        self.batcher = MicroBatcher(max_batch=max_batch,
-                                    max_wait_ms=max_wait_ms)
+        # tiered mode: per-tier coalescing lanes; batch_handler then
+        # takes (windows, tier) so a flush is served by ITS tier only
+        if tier_of is not None and batch_handler is None:
+            raise ValueError("tier_of requires a batch_handler (the "
+                             "scalar handler path has no tier routing)")
+        self.tier_of = tier_of
+        self.batcher = (
+            KeyedMicroBatcher(max_batch=max_batch, max_wait_ms=max_wait_ms)
+            if self.tier_of is not None
+            else MicroBatcher(max_batch=max_batch, max_wait_ms=max_wait_ms))
         self.stats = ServerStats()
         # control-plane tap (duck-typed control.telemetry.SloTelemetry):
         # every ingest is an arrival, every retired query a latency sample
@@ -110,12 +128,12 @@ class EnsembleServer:
         try:
             self.q.put_nowait((patient, windows, t_window))
             if self.telemetry is not None:
-                self.telemetry.record_arrival(t_window)
+                self.telemetry.record_arrival(t_window, patient=patient)
             return True
         except queue.Full:
             self.stats.record_shed()
             if self.telemetry is not None:
-                self.telemetry.record_shed(t_window)
+                self.telemetry.record_shed(t_window, patient=patient)
             return False
 
     # ------------------------------------------------------------ workers
@@ -125,21 +143,27 @@ class EnsembleServer:
             lat = now - t_window
             self.stats.record(lat, lat > self.slo)
             if self.telemetry is not None:
-                self.telemetry.record_served(lat, now)
+                self.telemetry.record_served(lat, now, patient=patient)
             self._results.put((patient, score, lat))
         for _ in tasks:
             self.q.task_done()
 
-    def _safe_batch_scores(self, windows: List[Dict]) -> List[float]:
+    def _call_batch(self, windows: List[Dict], tier=None) -> List[float]:
+        if self.tier_of is None:
+            return list(self.batch_handler(windows))
+        return list(self.batch_handler(windows, tier))
+
+    def _safe_batch_scores(self, windows: List[Dict],
+                           tier=None) -> List[float]:
         """A failing flush must not kill the worker or drop its healthy
         co-batched queries: retry singly, scoring only the bad ones NaN."""
         try:
-            return list(self.batch_handler(windows))
+            return self._call_batch(windows, tier)
         except Exception:
             out = []
             for w in windows:
                 try:
-                    out.extend(self.batch_handler([w]))
+                    out.extend(self._call_batch([w], tier))
                 except Exception:
                     out.append(float("nan"))
             return out
@@ -148,18 +172,40 @@ class EnsembleServer:
         # short poll only while a batch is coalescing (to honor
         # max_wait); block at the long timeout when idle
         coalesce_poll = min(0.05, self.batcher.max_wait / 2 or 0.05)
+        tiered = self.tier_of is not None
         while not self._stop.is_set():
             timeout = 0.05 if not len(self.batcher) else coalesce_poll
             try:
-                self.batcher.push(self.q.get(timeout=timeout))
+                task = self.q.get(timeout=timeout)
+                if tiered:
+                    # the tier is sampled at ROUTING time: a mid-queue
+                    # escalation moves the patient's NEXT queries.  A
+                    # failing tier_of must not kill the worker or
+                    # strand the popped query — route to the default
+                    # lane (None: TierRouter/TieredEnsemble fall back)
+                    try:
+                        key = self.tier_of(task[0])
+                    except Exception:
+                        key = None
+                    self.batcher.push(key, task)
+                else:
+                    self.batcher.push(task)
             except queue.Empty:
                 pass
-            if not self.batcher.ready():
-                continue
-            tasks = self.batcher.pop_batch()
+            if tiered:
+                tier = self.batcher.ready()
+                if tier is NO_LANE:
+                    continue
+                tasks = self.batcher.pop_batch(tier)
+            else:
+                tier = None
+                if not self.batcher.ready():
+                    continue
+                tasks = self.batcher.pop_batch()
             if not tasks:
                 continue
-            scores = self._safe_batch_scores([w for _, w, _ in tasks])
+            scores = self._safe_batch_scores([w for _, w, _ in tasks],
+                                             tier)
             self._retire(tasks, scores)
 
     def _run(self) -> None:

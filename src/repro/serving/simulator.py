@@ -50,6 +50,18 @@ class SimConfig:
     # epoch boundaries instead of resetting.  False keeps the original
     # drain-to-empty behaviour, untouched.
     carry_backlog: bool = False
+    # acuity tiers: admission-fraction per tier, keys ordered lowest ->
+    # highest acuity (e.g. {"stable": .6, "elevated": .25,
+    # "critical": .15}).  When set, ``model_costs`` must be a mapping
+    # tier -> per-member cost list: each query is stamped with its
+    # patient's CURRENT tier at window close and served with THAT
+    # tier's ensemble (the DES twin of per-tier selector routing).
+    # None => the original untiered behaviour, bit-identical.
+    tiers: Optional[Dict[str, float]] = None
+    # per-window hazard that a sub-top-tier patient escalates ONE tier
+    # at a window close (mid-stay acuity escalation, e.g. a stable bed
+    # deteriorating); drawn in event order, deterministic under seed
+    escalate_hazard: float = 0.0
 
 
 @dataclasses.dataclass
@@ -59,6 +71,7 @@ class QueryRecord:
     t_start: float = 0.0              # first model began executing
     t_done: float = 0.0              # last model finished
     n_models: int = 0
+    tier: str = ""                    # acuity tier at birth (tiered mode)
 
     @property
     def latency(self) -> float:
@@ -88,6 +101,12 @@ class SimResult:
     # them to the next epoch's ``simulate(..., backlog=)``
     backlog: np.ndarray = dataclasses.field(
         default_factory=lambda: np.asarray([]))
+    # tiered mode: the carried queries' tiers, aligned with ``backlog``
+    # (a carried query keeps the tier it was born with), and the acuity
+    # trail — (t, patient, old_tier, new_tier), old == "" at admission
+    backlog_tiers: List[str] = dataclasses.field(default_factory=list)
+    tier_log: List[Tuple[float, int, str, str]] = \
+        dataclasses.field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
         return np.asarray([q.latency for q in self.queries])
@@ -104,15 +123,19 @@ class SimResult:
         return self.device_busy / max(self.duration, 1e-9)
 
 
-def simulate(model_costs: Sequence[float], cfg: SimConfig,
-             backlog: Sequence[float] = ()) -> SimResult:
-    """model_costs: seconds/query for each SELECTED ensemble member.
+def simulate(model_costs, cfg: SimConfig,
+             backlog: Sequence[float] = (),
+             backlog_tiers: Sequence[str] = ()) -> SimResult:
+    """model_costs: seconds/query for each SELECTED ensemble member —
+    or, with ``cfg.tiers``, a mapping tier -> cost list (each query is
+    served with its birth-tier's ensemble).
     ``backlog``: ages of queries carried in from a previous epoch
     (``SimResult.backlog``); they enter the model queue at t=0 with
     negative birth times, so their end-to-end latency keeps
     accumulating across the epoch edge and is never double-counted —
     the carrying epoch returns them unserved, the serving epoch
-    retires them exactly once."""
+    retires them exactly once.  ``backlog_tiers`` aligns tiers with
+    those ages in tiered mode."""
     if cfg.carry_backlog and cfg.batch_period > 0:
         # batch mode schedules its final FLUSH past duration_seconds,
         # so held queries would be served beyond the epoch edge instead
@@ -120,7 +143,44 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
         raise ValueError("carry_backlog is incompatible with "
                          "batch_period > 0")
     rng = np.random.default_rng(cfg.seed)
-    costs = list(model_costs)
+    tiered = cfg.tiers is not None
+    if tiered:
+        tier_names = list(cfg.tiers)
+        fracs = np.asarray([cfg.tiers[t] for t in tier_names],
+                           np.float64)
+        if fracs.sum() <= 0:
+            raise ValueError("tier fractions must sum to > 0")
+        fracs = fracs / fracs.sum()
+        costs_by_tier = {t: list(model_costs[t]) for t in tier_names}
+        if len(backlog) and len(backlog_tiers) != len(backlog):
+            raise ValueError("tiered backlog needs one tier per age")
+        costs = None
+    else:
+        if cfg.escalate_hazard:
+            raise ValueError("escalate_hazard requires cfg.tiers")
+        costs = list(model_costs)
+    tier_now: Dict[int, str] = {}
+    tier_log: List[Tuple[float, int, str, str]] = []
+
+    def assign_tier(now: float, p: int) -> None:
+        t = tier_names[int(rng.choice(len(tier_names), p=fracs))]
+        tier_now[p] = t
+        tier_log.append((now, p, "", t))
+
+    def maybe_escalate(now: float, p: int) -> None:
+        """Mid-stay acuity escalation, drawn at window close BEFORE the
+        query is stamped (the deteriorating bed's next prediction is
+        already served at the higher tier)."""
+        if not cfg.escalate_hazard:
+            return
+        cur = tier_now[p]
+        i = tier_names.index(cur)
+        if i + 1 >= len(tier_names):
+            return
+        if rng.uniform() < cfg.escalate_hazard:
+            tier_now[p] = tier_names[i + 1]
+            tier_log.append((now, p, cur, tier_names[i + 1]))
+
     events: List[Tuple[float, int, int, tuple]] = []
     counter = itertools.count()
 
@@ -144,6 +204,8 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
             phase_of[p], admit_t[p] = ph, now
             active.add(p)
             churn_log.append((now, "admit", p))
+            if tiered:
+                assign_tier(now, p)
             t1 = now + ph + cfg.window_seconds
             if t1 <= cfg.duration_seconds:
                 push(t1, WINDOW, (p,))
@@ -163,6 +225,9 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
     else:
         # static cohort: schedule all window closures up front
         phases = rng.uniform(0, cfg.window_seconds, cfg.n_patients)
+        if tiered:                     # draws AFTER phases: the untiered
+            for p in range(cfg.n_patients):   # stream stays bit-identical
+                assign_tier(0.0, p)
         for p in range(cfg.n_patients):
             t = phases[p] + cfg.window_seconds
             while t <= cfg.duration_seconds:
@@ -185,11 +250,15 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
     device_busy = 0.0
 
     def enqueue_query(rec: QueryRecord, now: float):
-        rec.n_models = len(costs)
-        rec._remaining = len(costs)           # type: ignore[attr-defined]
+        # tiered: the query is served by its BIRTH tier's ensemble — the
+        # conservation invariant "never answered by the wrong tier's
+        # selector" is structural here
+        c_list = costs_by_tier[rec.tier] if tiered else costs
+        rec.n_models = len(c_list)
+        rec._remaining = len(c_list)          # type: ignore[attr-defined]
         rec.t_start = -1.0
         queries.append(rec)
-        for c in costs:
+        for c in c_list:
             model_q.push(now, (rec, c))
 
     def try_dispatch(now: float):
@@ -205,9 +274,11 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
 
     # backlog carried in from the previous epoch: already-born queries
     # join the model queue at t=0, ahead of this epoch's first window
+    # (a carried query keeps its birth tier)
     for k, age in enumerate(backlog):
-        enqueue_query(QueryRecord(patient=-(k + 1),
-                                  t_window=-float(age)), 0.0)
+        enqueue_query(QueryRecord(
+            patient=-(k + 1), t_window=-float(age),
+            tier=backlog_tiers[k] if tiered else ""), 0.0)
     if len(backlog):
         try_dispatch(0.0)
 
@@ -229,13 +300,16 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
             elif target < len(active):
                 discharge(now, len(active) - target)
         elif kind == WINDOW:
+            p = payload[0]
             if churn:
-                p = payload[0]
                 if p not in active:
                     continue              # discharged: window dropped
                 if now + cfg.window_seconds <= cfg.duration_seconds:
                     push(now + cfg.window_seconds, WINDOW, (p,))
-            rec = QueryRecord(patient=payload[0], t_window=now)
+            if tiered:
+                maybe_escalate(now, p)    # before stamping the query
+            rec = QueryRecord(patient=p, t_window=now,
+                              tier=tier_now.get(p, "") if tiered else "")
             if cfg.batch_period > 0:
                 held.append(rec)
             else:
@@ -261,10 +335,10 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
             for p, t_a in admit_t.items()))
     done = [q for q in queries if q.t_done > 0]
     # oldest first, so the next epoch's FIFO serves in birth order
-    backlog_out = np.asarray(sorted(
-        (cfg.duration_seconds - q.t_window
-         for q in queries if q.t_done <= 0), reverse=True)) \
-        if cfg.carry_backlog else np.asarray([])
+    carried = sorted(((cfg.duration_seconds - q.t_window, q.tier)
+                      for q in queries if q.t_done <= 0),
+                     key=lambda at: -at[0]) \
+        if cfg.carry_backlog else []
     return SimResult(
         queries=done,
         arrivals=np.asarray(sorted(q.t_window for q in queries)),
@@ -275,4 +349,6 @@ def simulate(model_costs: Sequence[float], cfg: SimConfig,
         patients={p: (t_a, discharge_t.get(p, float("inf")), phase_of[p])
                   for p, t_a in admit_t.items()},
         churn_log=churn_log,
-        backlog=backlog_out)
+        backlog=np.asarray([a for a, _ in carried]),
+        backlog_tiers=[t for _, t in carried],
+        tier_log=tier_log)

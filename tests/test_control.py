@@ -120,6 +120,37 @@ def test_telemetry_online_arrival_curve_and_tq():
         0.05 + queueing_bound(arr, 4.0, 0.0))
 
 
+def test_telemetry_memory_is_o_window_not_o_trace():
+    """Regression: raw timestamps are pruned on RECORD against the
+    high-water mark, so a week-long trace holds only the sliding
+    window's events — memory is O(window), not O(trace) (first step
+    toward the ROADMAP arrival-curve sketch)."""
+    tel = SloTelemetry(slo_seconds=0.5, window_seconds=10.0,
+                       clock=lambda: 0.0)
+    n, rate = 50_000, 5.0            # 10_000 s of trace, 5 events/s
+    for k in range(n):
+        t = k / rate
+        tel.record_arrival(t)
+        tel.record_served(0.1, t)
+        if k % 100 == 0:
+            tel.record_shed(t)
+    bound = int(tel.window * rate) + 2       # one window of events
+    assert len(tel._arrivals) <= bound
+    assert len(tel._served) <= bound
+    assert len(tel._shed) <= bound
+    snap = tel.snapshot(now=n / rate)
+    assert snap.n_arrivals <= bound
+    assert snap.arrival_rate == pytest.approx(rate, rel=0.05)
+    # out-of-order feeds cannot regress the cut: a stale event lands
+    # outside the (hwm - window) horizon and is REJECTED at record
+    # time — it must neither linger in memory nor skew the next
+    # snapshot's counts/rates
+    tel.record_arrival(0.0)
+    assert len(tel._arrivals) <= bound
+    assert tel._arrivals[0] > n / rate - tel.window - 1.0
+    assert tel.snapshot(now=n / rate).n_arrivals == snap.n_arrivals
+
+
 def test_telemetry_threaded_feed():
     tel = SloTelemetry(window_seconds=60.0)
     def feed():
@@ -632,6 +663,33 @@ def test_adaptive_bench_conserves_queries_across_epochs():
         # the static arm under sustained overload actually carries work
         if not adaptive:
             assert any(rec["backlog_out"] > 0 for rec in out["epochs"])
+
+
+def test_tiered_bench_conserves_and_protects_critical():
+    """Regression for the BENCH tiered section: per-tier conservation
+    fields sum to the fleet totals, every epoch's rungs honor the
+    shed-order invariant, and only low-acuity rungs absorb the shed
+    while the critical tier holds the rich ensemble."""
+    from benchmarks.adaptive_bench import run_tiered_sim, \
+        synthetic_testbed
+    zoo, costs, f_a = synthetic_testbed(seed=0)
+    out = run_tiered_sim(zoo=zoo, costs=costs, f_a=f_a, slo=1.0,
+                         schedule=[(2, 24), (3, 72), (2, 24)], seed=0)
+    assert out["per_tier_served_sum"] == out["served_total"]
+    assert out["born_total"] == out["served_total"] \
+        + out["final_backlog"]
+    tiers = list(out["tier_fracs"])
+    top_rung = len(out["ladder_sizes"]) - 1
+    for rec in out["epochs"]:
+        rungs = [rec["tiers"][t]["rung"] for t in tiers]
+        assert all(a <= b for a, b in zip(rungs, rungs[1:]))
+        for t in tiers:
+            tr = rec["tiers"][t]
+            assert tr["served"] + tr["backlog_out"] \
+                == tr["born"] + tr["backlog_in"]
+    crit, stable = tiers[-1], tiers[0]
+    assert out["per_tier"][crit]["min_rung"] == top_rung  # held rich
+    assert out["per_tier"][stable]["min_rung"] < top_rung  # absorbed
 
 
 # ------------------------------------------------- adaptive end-to-end
