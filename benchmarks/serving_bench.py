@@ -196,6 +196,141 @@ def bench_fused_serving(n_patients: int = 16, reps: int = 10,
     return out
 
 
+INGEST_MODE_KEYS = ("per_query_ms", "sustained_qps",
+                    "h2d_bytes_per_query", "marshal_ms_per_flush",
+                    "dispatches_per_query")
+INGEST_TOP_KEYS = ("n_patients", "n_members", "reps", "input_len",
+                   "modes", "h2d_reduction_x",
+                   "h2d_reduction_device_x", "speedup_vs_legacy",
+                   "bitwise_device_vs_packed")
+
+
+def check_ingest_schema(out: Dict) -> None:
+    """Schema guard for ``BENCH_serving.json["ingest"]`` — run by the
+    ``--smoke`` CI invocation so the tracked section can't silently
+    rot as the bench evolves."""
+    for k in INGEST_TOP_KEYS:
+        assert k in out, f"ingest bench missing key {k!r}"
+    for mode in ("legacy_marshal", "packed_host", "device_resident"):
+        assert mode in out["modes"], f"ingest bench missing mode {mode}"
+        for k in INGEST_MODE_KEYS:
+            assert k in out["modes"][mode], \
+                f"ingest mode {mode} missing key {k!r}"
+    assert out["bitwise_device_vs_packed"] is True
+
+
+def bench_ingest(n_patients: int = 64, reps: int = 5,
+                 input_len: int = 750, verbose=True,
+                 write_json: bool = True) -> Dict:
+    """Ingest-side microbench of the flush marshaling regimes on the
+    reduced zoo x ``n_patients`` streaming patients:
+
+    * ``legacy_marshal``   — the pre-refactor hot path: a host
+                             (member, patient) double loop builds one
+                             [M, Ppad, L, 1] input per bucket, M x L
+                             floats of H2D per patient;
+    * ``packed_host``      — one [Ppad, 3, L] window pack per flush,
+                             shipped once per device, lead-expanded to
+                             the stacked view ON device (3 x L floats
+                             of H2D per patient);
+    * ``device_resident``  — windows live in ``DeviceIngest`` ring
+                             buffers; the flush gathers them on device
+                             and only (patient, end, valid) int32
+                             triples cross the host boundary.
+
+    Scores are asserted equivalent across modes (bitwise for
+    device-vs-packed).  Merged into ``BENCH_serving.json`` under
+    ``"ingest"``.
+    """
+    import jax
+    from repro.configs.ecg_zoo import ECG_LEADS, zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.aggregator import DeviceIngest, ModalitySpec
+    from repro.serving.pipeline import EnsembleService, ZooMember
+
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    windows = [{"ecg": rng.standard_normal((ECG_LEADS, input_len))
+                .astype(np.float32)} for _ in range(n_patients)]
+
+    # stream the same windows into the device rings (mixed chunk sizes
+    # exercise the pow2 ingest ladder), then serve them as refs
+    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS)],
+                      n_patients, window_seconds=1.0)
+    refs = []
+    for p in range(n_patients):
+        ecg, off = windows[p]["ecg"], 0
+        for k in (200, 250, 150, 100):
+            di.ingest(off / input_len, p, "ecg", ecg[:, off:off + k])
+            off += k
+        while off < input_len:
+            di.ingest(off / input_len, p, "ecg",
+                      ecg[:, off:off + 250])
+            off += 250
+        refs.append(di.close_window(p, 1.0))
+
+    feeds = {"legacy_marshal":
+             (EnsembleService(members, marshal="legacy"), windows),
+             "packed_host": (EnsembleService(members), windows),
+             "device_resident": (EnsembleService(members), refs)}
+    out: Dict = {"n_patients": n_patients, "n_members": len(members),
+                 "reps": reps, "input_len": input_len, "modes": {}}
+    scores = {}
+    for name, (svc, feed) in feeds.items():
+        scores[name] = svc.predict_batch(feed)     # warmup/compile
+        d0, h0, m0 = (svc.dispatch_count, svc.h2d_bytes,
+                      svc.marshal_seconds)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            svc.predict_batch(feed)
+        dt = time.perf_counter() - t0
+        n_q = reps * n_patients
+        out["modes"][name] = {
+            "per_query_ms": dt / n_q * 1e3,
+            "sustained_qps": n_q / dt,
+            "h2d_bytes_per_query": (svc.h2d_bytes - h0) / n_q,
+            "marshal_ms_per_flush":
+                (svc.marshal_seconds - m0) / reps * 1e3,
+            "dispatches_per_query": (svc.dispatch_count - d0) / n_q,
+        }
+    # the modes must agree on the answers, not just the speed: packed
+    # vs legacy to float tolerance (different XLA programs), device vs
+    # packed BITWISE (same program, device-gathered inputs)
+    np.testing.assert_allclose(scores["packed_host"],
+                               scores["legacy_marshal"], atol=1e-6)
+    out["bitwise_device_vs_packed"] = bool(np.array_equal(
+        np.asarray(scores["device_resident"]),
+        np.asarray(scores["packed_host"])))
+    leg = out["modes"]["legacy_marshal"]
+    out["h2d_reduction_x"] = (leg["h2d_bytes_per_query"]
+                              / out["modes"]["packed_host"]
+                              ["h2d_bytes_per_query"])
+    out["h2d_reduction_device_x"] = (leg["h2d_bytes_per_query"]
+                                     / max(out["modes"]
+                                           ["device_resident"]
+                                           ["h2d_bytes_per_query"],
+                                           1e-9))
+    out["speedup_vs_legacy"] = {
+        m: leg["per_query_ms"] / out["modes"][m]["per_query_ms"]
+        for m in ("packed_host", "device_resident")}
+    if verbose:
+        print(f"\ningest bench (reduced zoo x {n_patients} patients, "
+              f"L={input_len}):")
+        for name, m in out["modes"].items():
+            print(f"  {name:16s}: {m['per_query_ms']:7.2f} ms/query  "
+                  f"{m['h2d_bytes_per_query']:9.0f} H2D B/query  "
+                  f"marshal {m['marshal_ms_per_flush']:6.2f} ms/flush")
+        print(f"  H2D reduction: {out['h2d_reduction_x']:.1f}x packed, "
+              f"{out['h2d_reduction_device_x']:.0f}x device-resident; "
+              f"device bitwise == packed: "
+              f"{out['bitwise_device_vs_packed']}")
+    if write_json:
+        _merge_bench_json({"ingest": out})
+    return out
+
+
 def bench_placement_sweep(device_counts=(1, 2, 4, 8),
                           n_patients: int = 16, reps: int = 5,
                           input_len: int = 750, verbose=True,
@@ -300,9 +435,26 @@ def bench_measured_costs(verbose=True) -> Dict:
 
 
 if __name__ == "__main__":
-    # standalone entry point for the multi-device sweep: the flag must
-    # land before jax initialises (jax is imported lazily above)
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=8")
-    bench_fused_serving()
-    bench_placement_sweep()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size CI invocation: run the fused + "
+                         "ingest benches at toy sizes, validate the "
+                         "BENCH_serving.json['ingest'] schema, write "
+                         "nothing")
+    args = ap.parse_args()
+    if args.smoke:
+        bench_fused_serving(n_patients=4, reps=2, input_len=250,
+                            write_json=False)
+        out = bench_ingest(n_patients=8, reps=2, input_len=250,
+                           write_json=False)
+        check_ingest_schema(out)
+        print("ingest schema OK")
+    else:
+        # standalone entry point for the multi-device sweep: the flag
+        # must land before jax initialises (jax is imported lazily)
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        bench_fused_serving()
+        bench_ingest()
+        bench_placement_sweep()

@@ -84,6 +84,9 @@ def bucket_zoo(specs: Sequence[EcgModelSpec]
 
 N_VITALS = 7     # 1 Hz vitals (mean BP, SpO2, ...)
 N_LABS = 8       # irregular labs (pH, lactate, ...)
+ECG_LEADS = 3    # leads I, II, III — the channel count of every ECG
+                 # window (members pick ONE lead; the serving pack ships
+                 # all three once and lead-selects on device)
 ECG_HZ = 250
 VITALS_HZ = 1
 CLIP_SECONDS = 30

@@ -16,6 +16,19 @@ cheapest-to-richest family of selectors the controller walks: ``shed``
 steps down to a cheaper ensemble under overload, ``climb`` steps back
 up when load recedes.
 
+Staging warms the full pow2 flush-size ladder (default ``(1, 2, 4,
+8)``), and the warmup inputs are the module-shared window packs of
+``pipeline._warmup_pack`` — a recomposition that stages a new
+(selector, placement) pair re-uses both the cached bucket programs AND
+the same (length, flush-size) window buffers, so hot-swap staging
+never re-materializes windows.  The data plane's window
+representation is selector-independent (one ``[Ppad, leads, L]`` pack
+per flush, or ``DeviceWindowRef``s into the device-resident ingest
+rings), so a swap landing mid-stream changes WHICH stacked params the
+next flush dispatches against, never how its windows are built:
+device-ingest refs keep flowing through ``facade.predict_batch``
+across recompose / re_place with zero re-marshaling.
+
 Placement is the second actuated dimension: with ``n_devices > 1`` (or
 an explicit ``placement_fn``) ``stage`` pre-stages ``(selector,
 placement)`` PAIRS — the selector's stacked bucket params sharded

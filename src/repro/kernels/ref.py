@@ -222,6 +222,32 @@ def moe_gmm(xbuf: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     return jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, w_down)
 
 
+# ------------------------------------------------------- window gather
+def window_gather(buf: jax.Array, patients: jax.Array, ends: jax.Array,
+                  valid: jax.Array, L: int) -> jax.Array:
+    """Ring-buffer window gather oracle (the serving ingest hot path).
+
+    ``buf`` is a multi-patient ring buffer ``[N, C, cap]`` (see
+    ``serving.aggregator.AggState``).  For each flush row ``i`` the last
+    ``L`` samples ending at ring position ``ends[i]`` (exclusive; any
+    integer — reduced mod ``cap``) are gathered for patient
+    ``patients[i]``, and positions older than ``valid[i]`` samples are
+    zeroed — fusing the aggregator's left-zero-fill (sensor dropout /
+    short windows) and the batch-row padding (``valid == 0`` rows come
+    back all-zero) into the gather itself.
+
+    Returns ``[P, C, L]``, oldest sample first.
+    """
+    cap = buf.shape[-1]
+    j = jnp.arange(L)
+    pos = (ends[:, None] - L + j[None, :]) % cap               # [P, L]
+    win = buf[patients[:, None, None],
+              jnp.arange(buf.shape[1])[None, :, None],
+              pos[:, None, :]]                                 # [P, C, L]
+    mask = j[None, None, :] >= (L - valid)[:, None, None]
+    return jnp.where(mask, win, jnp.zeros((), buf.dtype))
+
+
 # -------------------------------------------------------- conv1d stripe
 def conv1d_stripe(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                   stride: int = 1, groups: int = 1,

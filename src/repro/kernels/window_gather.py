@@ -1,0 +1,77 @@
+"""Ring-buffer window-gather Pallas TPU kernel — the device side of the
+streaming ingest hot path.
+
+``serving.aggregator.DeviceIngest`` keeps every patient's last ``cap``
+samples in one ``[N, C, cap]`` device-resident ring buffer
+(``AggState``).  A micro-batch flush needs the last ``L`` samples of
+each flushed patient as a dense ``[P, C, L]`` block — oldest first,
+left-zero-filled where the window holds fewer than ``L`` valid samples
+(sensor dropout / short first windows), all-zero for pow2 batch-padding
+rows (``valid == 0``).  This kernel fuses the ring unwrap, the
+zero-fill, and the batch padding into ONE gather so no host marshaling
+(and no per-member H2D copy) ever touches the flush path.
+
+Grid: ``(P,)`` — one step per flush row.  The patient id is a
+data-dependent block index, so ``patients``/``ends``/``valid`` ride in
+as scalar-prefetch operands (``PrefetchScalarGridSpec``) and each step
+DMAs exactly its patient's ``[C, cap]`` ring stripe into VMEM.  The
+ring unwrap is an on-MXU one-hot matmul ``[C, cap] @ [cap, L]`` —
+positions ``(end - L + j) mod cap`` are contiguous mod ``cap``, and the
+one-hot contraction is bitwise-exact for float32 (exactly one nonzero
+term per output lane), which the serving equivalence suite relies on.
+
+``kernels.ref.window_gather`` is the jnp oracle (and the XLA execution
+path the CPU-backed serving pipeline uses); this kernel is validated
+against it with ``interpret=True`` in ``tests/test_device_ingest.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pts_ref, ends_ref, val_ref, x_ref, o_ref, *, L: int,
+            cap: int):
+    i = pl.program_id(0)
+    end = ends_ref[i]
+    valid = val_ref[i]
+    x = x_ref[0]                                        # [C, cap]
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)  # [1, L]
+    pos = (end - L + j) % cap                           # [1, L]
+    capi = jax.lax.broadcasted_iota(jnp.int32, (cap, L), 0)
+    onehot = (capi == pos).astype(x.dtype)              # [cap, L]
+    win = jax.lax.dot_general(x, onehot, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    keep = j >= (L - valid)                             # [1, L]
+    o_ref[0] = jnp.where(keep, win.astype(o_ref.dtype),
+                         jnp.zeros((), o_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def window_gather(buf: jax.Array, patients: jax.Array, ends: jax.Array,
+                  valid: jax.Array, L: int, *,
+                  interpret: bool = False) -> jax.Array:
+    """buf: [N, C, cap] ring; patients/ends/valid: [P] int32.
+    Returns [P, C, L], matching ``ref.window_gather`` bitwise."""
+    N, C, cap = buf.shape
+    P = patients.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, C, cap),
+                         lambda i, pts, ends, val: (pts[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, L), lambda i, *_: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, L=L, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, C, L), buf.dtype),
+        interpret=interpret,
+    )(patients.astype(jnp.int32), ends.astype(jnp.int32),
+      valid.astype(jnp.int32), buf)

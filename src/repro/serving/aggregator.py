@@ -4,21 +4,34 @@ Multi-rate, multi-modal sensory streams are buffered per patient so the
 ensemble always sees a synchronized observation window Delta-T across all
 sensors.  Two implementations share semantics:
 
-* ``PatientAggregator`` — plain-python actor used by the serving pipeline
-  and the discrete-event simulator (arbitrary arrival patterns).
-* ``ingest_step`` / ``AggState`` — pure-functional jnp ring buffers
-  (jit-compatible) for the device-resident streaming path: state lives in
-  device arrays and is updated by a compiled step, the JAX-native analogue
-  of the paper's Ray stateful actors.
+* ``PatientAggregator`` — plain-python actor, kept as the semantics
+  ORACLE: the serving equivalence suite checks the device path against
+  it, and the discrete-event simulator still drives it directly.
+* ``AggState`` ring buffers — pure-functional jnp state (one
+  ``[n_patients, channels, capacity]`` buffer per modality) updated by
+  compiled steps, the JAX-native analogue of the paper's Ray stateful
+  actors.  ``DeviceIngest`` wraps them into the serving pipeline's
+  device-resident ingest stage: 250 Hz chunks land via ``ingest_chunk``
+  (a pow2 chunk-size ladder keeps the compiled-variant count bounded
+  under mixed-rate feeds) and a closed observation window is handed to
+  the ensemble as a ``DeviceWindowRef`` — three host integers per
+  modality, NO host-side sample marshaling.  The flush side
+  (``EnsembleService.predict_batch``) gathers the referenced windows
+  straight out of the ring with ``gather_windows`` (the
+  ``kernels.ref.window_gather`` program), so samples ingested on the
+  device are never copied back to the host on the serving hot path.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ref as kref
 
 
 # ------------------------------------------------- actor implementation
@@ -89,21 +102,82 @@ def agg_init(n_patients: int, channels: int, capacity: int) -> AggState:
         total=jnp.zeros((n_patients,), jnp.int32))
 
 
+def ring_wrap(cap: int) -> int:
+    """Wrap modulus for ``write_idx``: the largest multiple of ``cap``
+    not exceeding 2**30.  Ring positions are ``write_idx % cap``, so the
+    wrap point MUST be a multiple of ``cap`` — wrapping at a plain
+    2**30 silently sheared the ring for any capacity that doesn't
+    divide 2**30 (the pre-fix behavior; regression-tested)."""
+    return max(1, (1 << 30) // cap) * cap
+
+
 @jax.jit
 def ingest_step(state: AggState, patient: jax.Array,
                 samples: jax.Array) -> AggState:
-    """Append samples [channels, k] for one patient (ring semantics)."""
+    """Append samples [channels, k] for one patient (ring semantics).
+    Retraces per distinct ``k`` — prefer ``ingest_chunk`` on the
+    serving path, which pads to a static size ladder."""
     cap = state.buf.shape[-1]
     k = samples.shape[-1]
     idx = (state.write_idx[patient] + jnp.arange(k)) % cap
     buf = state.buf.at[patient, :, idx].set(samples.T)
     return AggState(
         buf=buf,
-        write_idx=state.write_idx.at[patient].add(k) % (2 ** 30),
+        write_idx=state.write_idx.at[patient].add(k) % ring_wrap(cap),
         total=state.total.at[patient].add(k))
 
 
-import functools
+def pow2_rung(n: int) -> int:
+    """Next power of two >= ``n`` (min 1): the ONE static-shape ladder
+    shared by ingest chunk padding, flush batch padding and ring
+    capacities, so every padded shape in the data plane lands on the
+    same log2-bounded set of compiled programs."""
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+def chunk_rung(k: int) -> int:
+    """Static chunk-size ladder: incoming chunks are right-zero-padded
+    to a ``pow2_rung`` so ``ingest_chunk`` compiles at most
+    ``log2(max_chunk)`` variants under mixed-rate feeds instead of one
+    per distinct chunk length."""
+    return pow2_rung(k)
+
+
+@jax.jit
+def _ingest_padded(state: AggState, patient: jax.Array,
+                   samples: jax.Array, n_valid: jax.Array) -> AggState:
+    """Ladder-shaped ingest step: ``samples`` is [channels, rung] with
+    only the first ``n_valid`` columns real; pad lanes scatter to an
+    out-of-bounds ring position and are dropped, so the ring never sees
+    the padding."""
+    cap = state.buf.shape[-1]
+    lane = jnp.arange(samples.shape[-1])
+    pos = (state.write_idx[patient] + lane) % cap
+    pos = jnp.where(lane < n_valid, pos, cap)          # OOB -> dropped
+    buf = state.buf.at[patient, :, pos].set(samples.T, mode="drop")
+    return AggState(
+        buf=buf,
+        write_idx=state.write_idx.at[patient].add(n_valid)
+        % ring_wrap(cap),
+        total=state.total.at[patient].add(n_valid))
+
+
+def ingest_chunk(state: AggState, patient: int,
+                 samples: np.ndarray) -> AggState:
+    """Append a variable-length chunk through the pow2 size ladder:
+    one compiled variant per rung, not per chunk length."""
+    samples = np.atleast_2d(np.asarray(samples, np.float32))
+    k = samples.shape[-1]
+    cap = state.buf.shape[-1]
+    if k > cap:
+        raise ValueError(f"chunk of {k} samples exceeds ring capacity "
+                         f"{cap}")
+    rung = chunk_rung(k)
+    if rung != k:
+        samples = np.pad(samples, ((0, 0), (0, rung - k)))
+    return _ingest_padded(state, jnp.asarray(patient, jnp.int32),
+                          jnp.asarray(samples),
+                          jnp.asarray(k, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -119,3 +193,148 @@ def read_window(state: AggState, patient: jax.Array,
 def read_window_static(state: AggState, patient: int, want: int
                        ) -> jax.Array:
     return read_window(state, jnp.asarray(patient), want)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def gather_windows(buf: jax.Array, patients: jax.Array,
+                   ends: jax.Array, valid: jax.Array,
+                   want: int) -> jax.Array:
+    """One-dispatch flush gather: the last ``want`` samples for each
+    flushed patient, ``[P, channels, want]`` oldest-first, with
+    left-zero-fill fused in (``valid[i] < want`` rows) and pow2 batch
+    padding (``valid == 0`` rows all-zero).  ``ends`` are sample
+    counts at window close (any integers — reduced mod capacity), so a
+    ref stays readable even while newer samples keep streaming into the
+    ring, as long as fewer than ``cap - want`` arrive before the flush.
+    Pure data movement: bitwise-identical to the host-marshaled pack.
+    """
+    return kref.window_gather(buf, patients, ends, valid, want)
+
+
+# ----------------------------------------- device-resident ingest stage
+class DeviceWindowRef(NamedTuple):
+    """A closed observation window that LIVES in a ``DeviceIngest``
+    ring: per modality just ``(end, valid)`` sample counts — the flush
+    gathers the samples on device, so handing a window to the server
+    costs a few host integers instead of a [channels, want] copy.
+    ``extra`` carries host-side side-channel inputs (labs vector)."""
+    ingest: "DeviceIngest"
+    patient: int
+    ends: Dict[str, int]
+    valid: Dict[str, int]
+    extra: Dict[str, np.ndarray]
+
+    def host_window(self, modality: str) -> np.ndarray:
+        """Read this window back as the oracle's [channels, want] array
+        (CPU-side models / debugging; NOT the serving hot path).
+        Staleness-guarded like the fused flush: a ref whose ring slot
+        has been overwritten by later ingest raises instead of silently
+        returning the newer window's samples."""
+        di = self.ingest
+        st = di.states[modality]
+        cap = st.buf.shape[-1]
+        want = di.want[modality]
+        oldest = self.ends[modality] - min(self.valid[modality], want)
+        if int(di.fed[modality][self.patient]) - oldest > cap:
+            raise ValueError(
+                f"stale DeviceWindowRef for patient {self.patient}: "
+                f"the {modality} ring (capacity {cap}) has overwritten"
+                f" its window; flush sooner or raise capacity_windows")
+        win = gather_windows(
+            st.buf, jnp.asarray([self.patient], jnp.int32),
+            jnp.asarray([self.ends[modality] % cap], jnp.int32),
+            jnp.asarray([self.valid[modality]], jnp.int32),
+            want)
+        return np.asarray(win[0])
+
+
+class DeviceIngest:
+    """Device-resident multi-patient ingest: one ``AggState`` ring per
+    modality, fed by the compiled pow2-ladder ``ingest_chunk``.
+
+    Window accounting stays on the host as plain integers (samples fed
+    per patient, high-water mark at the last window close); the samples
+    themselves never leave the device.  ``close_window`` emits a
+    ``DeviceWindowRef`` whose ``valid`` is the number of samples that
+    arrived inside the window (clamped to the nominal count), which is
+    exactly the ``PatientAggregator`` zero-fill contract: fewer samples
+    -> left-zero-fill, more -> keep the last nominal-count many.
+
+    ``capacity_windows`` rings hold that many windows of slack, so a
+    ref enqueued behind a busy server stays readable while the next
+    window's samples stream in underneath it.
+
+    Concurrency contract: every ingest step is a FUNCTIONAL update —
+    ``self.states`` is replaced, never mutated — so a flush thread's
+    snapshot of ``states[m]`` stays valid (and immutable) while ingest
+    keeps advancing, with no locks.  The cost is that the jitted
+    scatter cannot donate its input buffer (a donated ring would
+    invalidate exactly those in-flight flush snapshots), so on the CPU
+    backend each chunk pays an O(n_patients * channels * cap) ring
+    copy.  The flush side — this PR's target — never sees that cost;
+    amortizing the feed side (per-patient ring stripes so a chunk
+    rewrites only its own [channels, cap] slice, or a batched
+    multi-patient step) is the ROADMAP's batched-ingest follow-up.
+    """
+
+    def __init__(self, modalities: List[ModalitySpec],
+                 n_patients: int, window_seconds: float,
+                 capacity_windows: float = 2.0):
+        self.modalities = {m.name: m for m in modalities}
+        self.window = window_seconds
+        self.n_patients = n_patients
+        self.states: Dict[str, AggState] = {}
+        self.want: Dict[str, int] = {}
+        self.fed: Dict[str, np.ndarray] = {}
+        self.mark: Dict[str, np.ndarray] = {}
+        for m in modalities:
+            want = max(1, int(round(m.rate_hz * window_seconds)))
+            cap = chunk_rung(max(2, int(np.ceil(
+                capacity_windows * want))))          # pow2: wrap-exact
+            self.states[m.name] = agg_init(n_patients, m.channels, cap)
+            self.want[m.name] = want
+            self.fed[m.name] = np.zeros(n_patients, np.int64)
+            self.mark[m.name] = np.zeros(n_patients, np.int64)
+        self.window_start: List[Optional[float]] = [None] * n_patients
+
+    def ingest(self, t: float, patient: int, modality: str,
+               samples: np.ndarray) -> None:
+        samples = np.atleast_2d(np.asarray(samples, np.float32))
+        self.states[modality] = ingest_chunk(
+            self.states[modality], patient, samples)
+        self.fed[modality][patient] += samples.shape[-1]
+        if self.window_start[patient] is None:
+            self.window_start[patient] = t
+
+    def window_ready(self, patient: int, now: float) -> bool:
+        ws = self.window_start[patient]
+        return ws is not None and now - ws >= self.window
+
+    def close_window(self, patient: int, now: float,
+                     extra: Optional[Dict[str, np.ndarray]] = None
+                     ) -> DeviceWindowRef:
+        """Close the patient's window: snapshot (end, valid) counts per
+        modality, advance the high-water mark, and return the ref.  The
+        samples stay put — the flush gathers them on device."""
+        ends, valid = {}, {}
+        for name in self.modalities:
+            end = int(self.fed[name][patient])
+            ends[name] = end
+            valid[name] = min(end - int(self.mark[name][patient]),
+                              self.want[name])
+            self.mark[name][patient] = end
+        self.window_start[patient] = now
+        return DeviceWindowRef(ingest=self, patient=patient, ends=ends,
+                               valid=valid, extra=dict(extra or {}))
+
+    def warm_gather(self, lens: Tuple[int, ...],
+                    batch_sizes: Tuple[int, ...] = (1, 2, 4, 8),
+                    modality: str = "ecg") -> None:
+        """Pre-compile the flush gather at every (window length, pow2
+        flush size) the service will hit, off the latency path."""
+        st = self.states[modality]
+        z = jnp.zeros((max(batch_sizes),), jnp.int32)
+        for L in lens:
+            for p in batch_sizes:
+                jax.block_until_ready(gather_windows(
+                    st.buf, z[:p], z[:p], z[:p], L))

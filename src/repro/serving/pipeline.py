@@ -15,10 +15,31 @@ leading member axis (``launch.ensemble_parallel.stack_members``) and run
 as ONE ``ecg_apply_stacked`` dispatch per bucket, so a query costs
 ``n_buckets`` jitted calls (4 on the reduced 12-member zoo, 20 on the
 full 60) instead of ``n_members``.  ``predict_batch`` additionally
-micro-batches windows from MANY patients into the same stacked call —
-one host->device transfer in and one blocking device sync out per flush.
+micro-batches windows from MANY patients into the same stacked call.
 The per-member loop is kept (``fused=False``) as the equivalence oracle
 and for per-member cost measurement (``measured_costs``).
+
+The one-transfer-per-device flush contract
+------------------------------------------
+A flush ships each patient's raw ``[ECG_LEADS, L]`` window to a device
+AT MOST ONCE — never once per stacked member.  The host builds one
+``[Ppad, ECG_LEADS, L]`` window pack per distinct input length (a
+single O(P) pass; left-zero-padding of short windows and pow2 batch
+padding land here), transfers it once per device that hosts a bucket
+shard, and every bucket's jitted dispatch does its own **lead-gather**
+on device: the bucket's static lead indices select member rows out of
+the shared pack inside the same XLA program as the stacked forward
+pass, so the old O(M x P) per-(member, patient) host marshaling loop —
+and its M-times-redundant H2D traffic (M x L floats per patient
+instead of ECG_LEADS x L) — is gone.  With **device-resident ingest**
+(``serving.aggregator.DeviceIngest``), a batch of
+``DeviceWindowRef``s skips even that single transfer: the pack is
+gathered straight out of the on-device ring buffers
+(``gather_windows``), and only the flushed (patient, end, valid) int32
+triples cross the host boundary.  The pre-refactor marshaling loop is
+preserved as ``marshal="legacy"`` — the ingest microbench's baseline
+and a second equivalence oracle.  ``h2d_bytes`` / ``marshal_seconds``
+counters account both regimes for ``BENCH_serving.json["ingest"]``.
 
 Multi-device sharded serving (``placement=``)
 ---------------------------------------------
@@ -39,17 +60,19 @@ import dataclasses
 import functools
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.ecg_zoo import (CLIP_SECONDS, ECG_HZ, EcgModelSpec,
-                                   VITALS_HZ, bucket_zoo)
+from repro.configs.ecg_zoo import (CLIP_SECONDS, ECG_HZ, ECG_LEADS,
+                                   EcgModelSpec, VITALS_HZ, bucket_zoo)
 from repro.launch.ensemble_parallel import stack_members
 from repro.models.ecg_resnext import ecg_apply, ecg_apply_stacked
-from repro.serving.aggregator import ModalitySpec, PatientAggregator
+from repro.serving.aggregator import (DeviceIngest, DeviceWindowRef,
+                                      ModalitySpec, PatientAggregator,
+                                      gather_windows, pow2_rung)
 from repro.serving.placement import (Placement, grouped_lpt_placement,
                                      lpt_placement)
 
@@ -80,7 +103,26 @@ def _make_member_fn(params: Dict, spec: EcgModelSpec,
 
 
 @functools.lru_cache(maxsize=None)
-def _make_bucket_fn_cached(spec: EcgModelSpec, impl: str) -> Callable:
+def _make_bucket_fn_cached(spec: EcgModelSpec, leads: Tuple[int, ...],
+                           impl: str) -> Callable:
+    @jax.jit
+    def fn(stacked: Dict, win: jax.Array) -> jax.Array:
+        # on-device lead-gather: the shared [Ppad, C, L] window pack is
+        # expanded to the stacked [M, Ppad, L, 1] bucket view INSIDE
+        # the dispatch — the member axis never exists host-side, so the
+        # pack crosses to the device once per flush, not once per member
+        xs = jnp.transpose(win[:, leads, :], (1, 0, 2))[..., None]
+        logits = ecg_apply_stacked(stacked, xs, spec, impl=impl)
+        return jax.nn.softmax(logits, axis=-1)[..., 1]     # [M, P]
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _make_bucket_fn_legacy_cached(spec: EcgModelSpec,
+                                  impl: str) -> Callable:
+    """Pre-refactor dispatch: takes the host-marshaled [M, Ppad, L, 1]
+    member-expanded input (``marshal="legacy"``) — kept as the ingest
+    microbench baseline and equivalence oracle."""
     @jax.jit
     def fn(stacked: Dict, xs: jax.Array) -> jax.Array:
         logits = ecg_apply_stacked(stacked, xs, spec, impl=impl)
@@ -88,16 +130,36 @@ def _make_bucket_fn_cached(spec: EcgModelSpec, impl: str) -> Callable:
     return fn
 
 
-def _make_bucket_fn(spec: EcgModelSpec, impl: str) -> Callable:
-    """Shared per (architecture, impl): every service (and every staged
-    (selector, placement) pair) reuses ONE jit object per bucket shape,
-    so re-staging across swaps/placements hits the compile cache
+def _make_bucket_fn(spec: EcgModelSpec, leads: Sequence[int],
+                    impl: str, marshal: str = "packed") -> Callable:
+    """Shared per (architecture, leads, impl): every service (and every
+    staged (selector, placement) pair) reuses ONE jit object per bucket
+    shape, so re-staging across swaps/placements hits the compile cache
     instead of recompiling identical programs.  ``name``/``lead`` are
-    blanked from the cache key — lead selection happens on the host
-    when the input is built, so two buckets whose representative
-    members differ only by lead share the same XLA program."""
-    return _make_bucket_fn_cached(
-        dataclasses.replace(spec, name="", lead=0), impl)
+    blanked from the cache key; the packed form instead carries the
+    bucket's full lead TUPLE statically — the on-device gather is baked
+    into the program, and two buckets whose representative members
+    differ only by name share it."""
+    blank = dataclasses.replace(spec, name="", lead=0)
+    if marshal == "legacy":
+        return _make_bucket_fn_legacy_cached(blank, impl)
+    return _make_bucket_fn_cached(blank, tuple(leads), impl)
+
+
+# flush-size ladder: micro-batches pad up to aggregator.pow2_rung so
+# every path (packed / refs / legacy) and the ingest side share one
+# log2-bounded set of compiled shapes
+_next_pow2 = pow2_rung
+
+
+@functools.lru_cache(maxsize=None)
+def _warmup_pack(L: int, p: int, channels: int = ECG_LEADS
+                 ) -> np.ndarray:
+    """Shared zero window packs for warmup/staging: every bucket (and
+    every service being staged for a hot swap) warms the same
+    (length, flush-size) buffer instead of re-materializing windows
+    per staged selector."""
+    return np.zeros((p, channels, L), np.float32)
 
 
 class EnsembleService:
@@ -127,7 +189,8 @@ class EnsembleService:
                  n_devices: int = 1, fused: bool = True,
                  impl: str = "xla",
                  placement: Optional[Placement] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 marshal: str = "packed"):
         self.members = list(members)
         self.vitals_model = vitals_model
         self.labs_model = labs_model
@@ -135,6 +198,9 @@ class EnsembleService:
         self.impl = impl
         self.n_devices = n_devices
         self.placement = placement
+        if marshal not in ("packed", "legacy"):
+            raise ValueError(f"unknown marshal mode {marshal!r}")
+        self.marshal = marshal
         self._devices = list(devices) if devices is not None else None
         if placement is not None:
             if not fused:
@@ -146,6 +212,11 @@ class EnsembleService:
                     f"placement must cover every member exactly once: "
                     f"got {placed} for {len(self.members)} members")
         self.dispatch_count = 0
+        # ingest-side accounting for BENCH_serving.json["ingest"]:
+        # bytes shipped host->device for flush inputs, and host seconds
+        # spent building/transferring them (the marshaling cost)
+        self.h2d_bytes = 0
+        self.marshal_seconds = 0.0
         self._count_lock = threading.Lock()    # server workers share us
         self._fns: List[Callable] = [
             _make_member_fn(m.params, m.spec, impl) for m in self.members]
@@ -198,11 +269,13 @@ class EnsembleService:
                                          for i in idx])
                 if dev is not None:
                     stacked = jax.device_put(stacked, dev)
+                leads = [specs[i].lead for i in idx]
                 out.append(_Bucket(
                     spec=spec, idx=idx,
-                    leads=[specs[i].lead for i in idx],
+                    leads=leads,
                     stacked=stacked,
-                    fn=_make_bucket_fn(spec, self.impl),
+                    fn=_make_bucket_fn(spec, leads, self.impl,
+                                       self.marshal),
                     device=dev))
         return out
 
@@ -230,17 +303,31 @@ class EnsembleService:
 
     # ---------------------------------------------------------- warmup
     def _bucket_input(self, b: _Bucket, p: int) -> jax.Array:
-        x = np.zeros((len(b.idx), p, b.spec.input_len, 1), np.float32)
+        if self.marshal == "legacy":
+            x = np.zeros((len(b.idx), p, b.spec.input_len, 1),
+                         np.float32)
+        else:
+            x = _warmup_pack(b.spec.input_len, p)
         if b.device is not None:
             return jax.device_put(x, b.device)
         return jnp.asarray(x)
 
-    def warmup(self, batch_sizes: Sequence[int] = (1,)) -> None:
+    def warmup(self, batch_sizes: Sequence[int] = (1, 2, 4, 8)) -> None:
+        """Compile every bucket dispatch at the pow2 flush-size ladder
+        (the sizes ``predict_batch`` pads to), so the first full-census
+        flush after build/staging never pays XLA compile on the
+        latency-critical path.  Packed mode shares one zero window pack
+        per (input length, flush size, device) across all buckets."""
         if self.fused:
+            shared: Dict = {}
             for b in self._buckets:
                 for p in batch_sizes:
-                    b.fn(b.stacked,
-                         self._bucket_input(b, p)).block_until_ready()
+                    key = (b.spec.input_len, b.device, p)
+                    x = shared.get(key)
+                    if x is None or self.marshal == "legacy":
+                        x = self._bucket_input(b, p)
+                        shared[key] = x
+                    b.fn(b.stacked, x).block_until_ready()
         else:
             for m, fn in zip(self.members, self._fns):
                 fn(jnp.zeros((1, m.spec.input_len, 1)))
@@ -282,33 +369,207 @@ class EnsembleService:
         return out
 
     # --------------------------------------------------------- serving
-    def predict(self, windows: Dict[str, np.ndarray]) -> float:
-        """windows: {"ecg": [3, L], "vitals": [7, W], "labs": [8]}.
-        Returns the bagged P(stable) (Eq. 5)."""
+    def predict(self, windows) -> float:
+        """windows: {"ecg": [3, L], "vitals": [7, W], "labs": [8]} or a
+        ``DeviceWindowRef``.  Returns the bagged P(stable) (Eq. 5)."""
         return self.predict_batch([windows])[0]
 
-    def predict_batch(self, batch: Sequence[Dict[str, np.ndarray]]
-                      ) -> List[float]:
-        """Micro-batched form of ``predict``: one flush for windows from
-        len(batch) patients.  Fused path: per bucket, ONE [M, P, L, 1]
-        host->device transfer and ONE stacked dispatch; all device work
-        is retired with a single blocking gather at the end.  ECG
-        windows shorter than a member's input_len are left-zero-padded
-        (the aggregator's zero-fill convention), keeping compile shapes
-        static."""
+    def predict_batch(self, batch) -> List[float]:
+        """Micro-batched form of ``predict``: one flush for windows
+        from len(batch) patients — host window dicts or
+        ``DeviceWindowRef``s (never mixed).  Fused packed path: ONE
+        [Ppad, 3, L] window pack per distinct input length, shipped at
+        most once per device, lead-expanded to the stacked bucket view
+        inside each bucket's dispatch; all device work is retired with
+        a single blocking gather at the end.  ECG windows shorter than
+        a member's input_len are left-zero-padded (the aggregator's
+        zero-fill convention), keeping compile shapes static."""
         if not len(batch):
             return []
+        if isinstance(batch[0], DeviceWindowRef):
+            return self._predict_refs(batch)
         if not self.fused:
             return [self._predict_one_unfused(w) for w in batch]
+        if self.marshal == "legacy":
+            return self._predict_batch_legacy(batch)
 
         P = len(batch)
         # pad the micro-batch to the next power of two: per-window
         # forward passes are batch-independent, so zero rows are inert,
         # and flushes of any size hit one of log2(max_batch) compiled
         # programs instead of recompiling per distinct size
-        Ppad = 1 << (P - 1).bit_length()
+        Ppad = _next_pow2(P)
+        t_marshal = time.perf_counter()
+        packs: Dict[int, np.ndarray] = {}
+        for L in sorted({b.spec.input_len for b in self._buckets}):
+            win = np.zeros((Ppad, ECG_LEADS, L), np.float32)
+            for p, w in enumerate(batch):
+                clip = np.asarray(w["ecg"], np.float32)[:, -L:]
+                win[p, :, L - clip.shape[-1]:] = clip
+            packs[L] = win
+        dev_wins, h2d = self._ship_packs(packs)
+        marshal_s = time.perf_counter() - t_marshal
+        scores = self._flush(dev_wins, P)
+        with self._count_lock:
+            self.h2d_bytes += h2d
+            self.marshal_seconds += marshal_s
+        return self._combine(scores, batch)
+
+    def _ship_packs(self, packs: Dict[int, np.ndarray]
+                    ) -> Tuple[Dict, int]:
+        """Transfer each window pack AT MOST once per device hosting a
+        bucket shard; every shard on that device reads the same pinned
+        copy.  Returns ({(L, device): array}, bytes shipped)."""
+        dev_wins: Dict = {}
+        h2d = 0
+        for b in self._buckets:
+            key = (b.spec.input_len, b.device)
+            if key in dev_wins:
+                continue
+            win = packs[b.spec.input_len]
+            nbytes = win.nbytes if isinstance(win, np.ndarray) else 0
+            dev_wins[key] = jax.device_put(win, b.device) \
+                if b.device is not None else jnp.asarray(win)
+            h2d += nbytes
+        return dev_wins, h2d
+
+    def _flush(self, dev_wins: Dict, P: int) -> np.ndarray:
+        """Issue one stacked dispatch per bucket shard against the
+        shipped packs (async), then retire everything with a single
+        cross-device gather."""
         score_mat = np.zeros((len(self.members), P))
         pending = []
+        for b in self._buckets:
+            y = b.fn(b.stacked, dev_wins[(b.spec.input_len, b.device)])
+            pending.append((b, y))                     # async dispatch
+        with self._count_lock:
+            self.dispatch_count += len(pending)
+        for b, y in pending:      # one sync point: cross-device gather
+            score_mat[b.idx] = np.asarray(
+                jax.block_until_ready(y))[:, :P]
+        return score_mat
+
+    def _predict_refs(self, batch: Sequence[DeviceWindowRef]
+                      ) -> List[float]:
+        """Device-resident flush: the batch's windows already live in a
+        ``DeviceIngest`` ring, so the pack is GATHERED on device
+        (``gather_windows`` fuses ring unwrap + zero-fill + batch
+        padding) and only the flushed (patient, end, valid) int32
+        triples cross the host boundary — zero sample bytes of H2D.
+        Sharded plans copy the gathered pack device-to-device once per
+        shard device.  Bitwise-identical to the host-dict path fed the
+        same windows."""
+        if not self.fused:
+            return [self._predict_one_unfused(self._ref_windows(r))
+                    for r in batch]
+        if self.marshal == "legacy":
+            raise ValueError("DeviceWindowRef flushes need the packed "
+                             "marshal (legacy expects member-expanded "
+                             "host inputs)")
+        ingest = batch[0].ingest
+        if any(r.ingest is not ingest for r in batch):
+            raise ValueError("a flush must come from one DeviceIngest")
+        state = ingest.states["ecg"]
+        cap = state.buf.shape[-1]
+        P = len(batch)
+        Ppad = _next_pow2(P)
+        t_marshal = time.perf_counter()
+        lens = sorted({b.spec.input_len for b in self._buckets})
+        # staleness guard: a ref enqueued behind a long stall can be
+        # OUTLIVED by the ring — newer samples overwrite its window.
+        # The oldest position any gather will read-and-use is
+        # end - min(valid, max L); if ingest has advanced more than cap
+        # past it, serving would silently score the WRONG window's
+        # data, so refuse instead (the server's safe-batch wrapper
+        # turns that into a NaN score for the stale query only).  Two
+        # host integers per ref — nothing touches the device.
+        l_max = max(lens, default=0)
+        for r in batch:
+            oldest = r.ends["ecg"] - min(r.valid["ecg"], l_max)
+            if int(ingest.fed["ecg"][r.patient]) - oldest > cap:
+                raise ValueError(
+                    f"stale DeviceWindowRef for patient {r.patient}: "
+                    f"the ring (capacity {cap}) has overwritten its "
+                    f"window; flush sooner or raise capacity_windows")
+        patients = np.zeros(Ppad, np.int32)
+        ends = np.zeros(Ppad, np.int32)
+        valid = np.zeros(Ppad, np.int32)
+        for p, r in enumerate(batch):
+            patients[p] = r.patient
+            ends[p] = r.ends["ecg"] % cap
+            valid[p] = r.valid["ecg"]
+        pj, ej, vj = (jnp.asarray(patients), jnp.asarray(ends),
+                      jnp.asarray(valid))
+        h2d = patients.nbytes + ends.nbytes + valid.nbytes
+        packs: Dict[int, jax.Array] = {}
+        for L in lens:
+            packs[L] = gather_windows(state.buf, pj, ej, vj, L)
+        dev_wins, _ = self._ship_packs(packs)   # D2D for remote shards
+        marshal_s = time.perf_counter() - t_marshal
+        scores = self._flush(dev_wins, P)
+        with self._count_lock:
+            self.h2d_bytes += h2d
+            self.marshal_seconds += marshal_s
+        return self._combine(scores, self._refs_side_batch(batch))
+
+    def _refs_side_batch(self, batch: Sequence[DeviceWindowRef]):
+        """CPU-side model inputs for a ref flush: with a vitals model
+        attached, read ALL flushed patients' vitals windows back in ONE
+        batched gather (low-rate, tiny; index arrays padded to the same
+        pow2 rung as the ECG path, so flush-size churn never recompiles
+        it) instead of one device round-trip per patient, and hand
+        ``_combine`` plain dicts.  Without CPU-side models the refs
+        pass through untouched and nothing is ever read back."""
+        if self.vitals_model is None \
+                or "vitals" not in batch[0].ingest.states:
+            return batch
+        ingest = batch[0].ingest
+        st = ingest.states["vitals"]
+        cap = st.buf.shape[-1]
+        want = ingest.want["vitals"]
+        # the low-rate ring needs its own staleness guard: its (small)
+        # capacity is overrun on a different clock than the ECG ring's
+        for r in batch:
+            oldest = r.ends["vitals"] - min(r.valid["vitals"], want)
+            if int(ingest.fed["vitals"][r.patient]) - oldest > cap:
+                raise ValueError(
+                    f"stale DeviceWindowRef for patient {r.patient}: "
+                    f"the vitals ring (capacity {cap}) has overwritten"
+                    f" its window; flush sooner or raise "
+                    f"capacity_windows")
+        Ppad = _next_pow2(len(batch))
+        patients = np.zeros(Ppad, np.int32)
+        ends = np.zeros(Ppad, np.int32)
+        valid = np.zeros(Ppad, np.int32)
+        for p, r in enumerate(batch):
+            patients[p] = r.patient
+            ends[p] = r.ends["vitals"] % cap
+            valid[p] = r.valid["vitals"]
+        win = np.asarray(gather_windows(
+            st.buf, jnp.asarray(patients), jnp.asarray(ends),
+            jnp.asarray(valid), want))
+        return [{**r.extra, "vitals": win[p]}
+                for p, r in enumerate(batch)]
+
+    def _ref_windows(self, r: DeviceWindowRef) -> Dict[str, np.ndarray]:
+        """Materialize a ref as the oracle's host window dict (unfused
+        fallback only — the fused path never reads samples back)."""
+        out = dict(r.extra)
+        for name in r.ends:
+            out[name] = r.host_window(name)
+        return out
+
+    def _predict_batch_legacy(self, batch) -> List[float]:
+        """Pre-refactor hot path: per bucket an [M, Ppad, L, 1] input
+        is marshaled by a host (member, patient) double loop and
+        shipped whole — M x L floats per patient per bucket.  Kept
+        behind ``marshal="legacy"`` as the ingest bench baseline."""
+        P = len(batch)
+        Ppad = _next_pow2(P)
+        score_mat = np.zeros((len(self.members), P))
+        pending = []
+        h2d = 0
+        t_marshal = time.perf_counter()
         for b in self._buckets:
             L = b.spec.input_len
             xs = np.zeros((len(b.idx), Ppad, L, 1), np.float32)
@@ -316,18 +577,21 @@ class EnsembleService:
                 for p, w in enumerate(batch):
                     clip = np.asarray(w["ecg"])[lead, -L:]
                     xs[j, p, L - clip.shape[-1]:, 0] = clip
+            h2d += xs.nbytes
             # sharded plan: pin the input beside its pinned params so
             # the dispatch runs on (and stays on) the shard's device
             x = jax.device_put(xs, b.device) if b.device is not None \
                 else jnp.asarray(xs)
             y = b.fn(b.stacked, x)
             pending.append((b, y))                     # async dispatch
+        marshal_s = time.perf_counter() - t_marshal
         with self._count_lock:
             self.dispatch_count += len(pending)
+            self.h2d_bytes += h2d
+            self.marshal_seconds += marshal_s
         for b, y in pending:      # one sync point: cross-device gather
             score_mat[b.idx] = np.asarray(
                 jax.block_until_ready(y))[:, :P]
-
         return self._combine(score_mat, batch)
 
     def _predict_one_unfused(self, windows: Dict[str, np.ndarray]
@@ -344,18 +608,35 @@ class EnsembleService:
             self.dispatch_count += len(self.members)
         return self._combine(score_mat, [windows])[0]
 
-    def _combine(self, score_mat: np.ndarray,
-                 batch: Sequence[Dict[str, np.ndarray]]) -> List[float]:
+    def _side_input(self, item, name: str) -> Optional[np.ndarray]:
+        """The CPU-side models' input for one batch item: a window-dict
+        key, or — for a ``DeviceWindowRef`` — the labs side channel /
+        a lazy readback of the (tiny, low-rate) vitals window.  Only
+        read when the matching model is attached, so the fused ECG
+        path stays readback-free."""
+        if isinstance(item, DeviceWindowRef):
+            if name in item.extra:
+                return item.extra[name]
+            if name in item.ends:
+                return item.host_window(name)
+            return None
+        return item.get(name)
+
+    def _combine(self, score_mat: np.ndarray, batch) -> List[float]:
         """Per-patient Eq. 5 mean over zoo scores + CPU-side models."""
         out = []
         for p, windows in enumerate(batch):
             scores = list(score_mat[:, p]) if len(self.members) else []
-            if self.vitals_model is not None and "vitals" in windows:
-                scores.append(float(self.vitals_model.predict_proba(
-                    windows["vitals"][None])[0]))
-            if self.labs_model is not None and "labs" in windows:
-                scores.append(float(self.labs_model.predict_proba(
-                    windows["labs"][None])[0]))
+            if self.vitals_model is not None:
+                vit = self._side_input(windows, "vitals")
+                if vit is not None:
+                    scores.append(float(self.vitals_model.predict_proba(
+                        vit[None])[0]))
+            if self.labs_model is not None:
+                labs = self._side_input(windows, "labs")
+                if labs is not None:
+                    scores.append(float(self.labs_model.predict_proba(
+                        labs[None])[0]))
             out.append(float(np.mean(scores)) if scores else 0.5)
         return out
 
@@ -411,6 +692,16 @@ class ServedQuery:
 class StreamingPipeline:
     """Stateful aggregators + the ensemble service, driven by a stream.
 
+    ``device_ingest=True`` replaces the per-sample python tuple buffers
+    with ``serving.aggregator.DeviceIngest``: 250 Hz chunks land in
+    device-resident ring buffers via the compiled pow2-ladder
+    ``ingest_chunk``, and a closed window is served as a
+    ``DeviceWindowRef`` — the ensemble's flush gathers the samples on
+    device, so the ingest->inference path never marshals waveforms
+    through the host.  ``PatientAggregator`` (the default) is kept as
+    the semantics oracle; the two paths score bitwise-identically
+    under the equivalence suite's aligned-feed contract.
+
     With ``tier_of`` (patient -> acuity tier) the service must be
     tier-routing (``TierRouter`` / ``control.tiers.TieredEnsemble``):
     each closed window is answered by the patient's CURRENT tier's
@@ -418,28 +709,68 @@ class StreamingPipeline:
 
     def __init__(self, service, n_patients: int,
                  window_seconds: float = float(CLIP_SECONDS),
-                 tier_of: Optional[Callable[[int], str]] = None):
-        mods = [ModalitySpec("ecg", ECG_HZ, 3),
+                 tier_of: Optional[Callable[[int], str]] = None,
+                 device_ingest: bool = False,
+                 capacity_windows: float = 2.0):
+        mods = [ModalitySpec("ecg", ECG_HZ, ECG_LEADS),
                 ModalitySpec("vitals", VITALS_HZ, 7)]
         self.service = service
         self.tier_of = tier_of
-        self.aggs = [PatientAggregator(mods, window_seconds)
-                     for _ in range(n_patients)]
+        self.device_ingest: Optional[DeviceIngest] = None
+        if device_ingest:
+            self.device_ingest = DeviceIngest(
+                mods, n_patients, window_seconds,
+                capacity_windows=capacity_windows)
+            # pre-compile the flush gather for every window length the
+            # service can ask for (best effort: facades/routers don't
+            # expose members — call warm_gather yourself there), so the
+            # first closed window never pays XLA compile at serve time
+            members = getattr(service, "members", None)
+            if members:
+                self.device_ingest.warm_gather(
+                    tuple(sorted({m.spec.input_len for m in members})))
+            # the CPU-side vitals model's batched readback gathers at
+            # the same pow2 rungs over the (differently shaped) vitals
+            # ring — warm those too, it costs milliseconds
+            self.device_ingest.warm_gather(
+                (self.device_ingest.want["vitals"],),
+                modality="vitals")
+            self.aggs = []
+        else:
+            self.aggs = [PatientAggregator(mods, window_seconds)
+                         for _ in range(n_patients)]
         self.labs_cache: Dict[int, np.ndarray] = {}
         self.records: List[ServedQuery] = []
+
+    def _close(self, t: float, patient: int):
+        """The closed window in whichever representation the ingest
+        side keeps: a host window dict, or a DeviceWindowRef."""
+        if self.device_ingest is not None:
+            extra = {}
+            if patient in self.labs_cache:
+                extra["labs"] = self.labs_cache[patient]
+            return self.device_ingest.close_window(patient, t,
+                                                   extra=extra)
+        windows = self.aggs[patient].pop_window(t)
+        if patient in self.labs_cache:
+            windows["labs"] = self.labs_cache[patient]
+        return windows
 
     def feed(self, t: float, patient: int, modality: str,
              samples: np.ndarray) -> Optional[ServedQuery]:
         if modality == "labs":
             self.labs_cache[patient] = np.asarray(samples)
             return None
-        agg = self.aggs[patient]
-        agg.ingest(t, modality, samples)
-        if not agg.window_ready(t):
-            return None
-        windows = agg.pop_window(t)
-        if patient in self.labs_cache:
-            windows["labs"] = self.labs_cache[patient]
+        if self.device_ingest is not None:
+            self.device_ingest.ingest(t, patient, modality, samples)
+            if not self.device_ingest.window_ready(patient, t):
+                return None
+        else:
+            agg = self.aggs[patient]
+            agg.ingest(t, modality, samples)
+            if not agg.window_ready(t):
+                return None
+        windows = self._close(t, patient)
         t0 = time.perf_counter()
         if self.tier_of is not None:
             score = self.service.predict(windows, self.tier_of(patient))

@@ -9,6 +9,14 @@ patients through a shared ``MicroBatcher`` (bounded by ``max_batch`` /
 With only a scalar ``handler`` they process queries one at a time as
 before.
 
+The ``windows`` payload is OPAQUE to the server: a host window dict,
+or — under device-resident ingest — a
+``serving.aggregator.DeviceWindowRef`` (three host integers per
+modality; the flush gathers the samples on device).  Queue bounds,
+shedding, telemetry taps and tier routing are identical either way,
+so switching the ingest side to the device rings changes nothing
+above ``submit``.
+
 Tiered serving: with ``tier_of`` (patient id -> acuity tier, e.g.
 ``control.tiers.TierRegistry.tier_of``) the batcher becomes tier-KEYED
 — cross-patient coalescing still happens, but only WITHIN a tier — and
