@@ -1,0 +1,508 @@
+"""Chaos soak harness: replay a streamed ICU trace through the FULL
+device-ingest serving stack while a seeded ``FaultPlane`` injects
+device loss, a worker stall, and an ingest-backpressure episode — then
+hold the whole run to four invariants:
+
+1. **conservation** — every submitted query is accounted exactly once:
+   real-scored + NaN-failed + rejected == submitted (nothing silently
+   dropped, nothing double-served);
+2. **bitwise-vs-oracle** — every query that delivered a REAL score is
+   bitwise-identical to a fault-free oracle rescoring of the exact same
+   flush composition (window snapshot + member selection), so a fault
+   can delay or fail a score but never silently change one;
+3. **bounded recovery** — after each fault clears, the sliding-window
+   p99 is back under the SLO within ``recovery_slo_s``;
+4. **no leaked threads** — server workers/watchdog and controller
+   monitor/recompose/replace threads (all ``repro-`` named) are gone
+   after shutdown.
+
+The run drives the real wiring end to end: ``DeviceIngest`` rings ->
+``DeviceWindowRef`` submit -> bounded priority-aware ``ShedQueue`` ->
+batch workers + watchdog -> ``HotSwapper`` facade armed by the fault
+plane -> live ``AdaptiveController`` monitor loop
+(``control.faults.wire_controller``) actuating on wall-clock telemetry.
+
+``BENCH_chaos.json`` records both lanes: ``single_device`` (transient
+device loss — the only recoverable shape without a survivor) and
+``forced_8_device`` (permanent loss -> quarantine + re-place onto
+survivors, run in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+``--smoke`` is the CI tier1-chaos entry: tiny trace, fixed seed and
+schedule, both lanes, schema-gated, writes nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_chaos.json")
+N_FORCED = 8
+
+CHAOS_LANE_KEYS = (
+    "n_devices", "n_patients", "windows_per_patient", "seed", "slo_s",
+    "deadline_s", "schedule", "submitted", "ring_rejected", "served",
+    "served_real", "failed", "rejected", "rejected_by_tier",
+    "critical_rejected", "stalls", "quarantined", "recoveries",
+    "controller", "faults", "p50_ms", "p99_ms",
+    "conservation_ok", "bitwise_ok", "n_bitwise_checked",
+    "recovery_ok", "no_leaked_threads", "leaked_threads",
+)
+FAULT_KINDS_REQUIRED = ("device_loss", "worker_stall", "backpressure")
+
+
+def default_schedule(n_devices: int, t0: float = 0.45):
+    """One of each fault kind.  With survivors the device loss is
+    PERMANENT (recovery == quarantine + re-place); on a lone device it
+    is transient (recovery == the device coming back) — the only
+    recoverable shape there."""
+    from repro.control.faults import FaultEvent
+    if n_devices >= 2:
+        loss = FaultEvent(t0, "device_loss", target=1, duration=0.0)
+    else:
+        loss = FaultEvent(t0, "device_loss", target=0, duration=0.35)
+    return [loss,
+            FaultEvent(t0 + 0.55, "worker_stall", duration=0.5),
+            FaultEvent(t0 + 1.25, "backpressure", duration=0.4)]
+
+
+def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
+              input_len: int = 250, n_devices: int = 1, seed: int = 0,
+              slo: float = 1.0, deadline: float = 0.25,
+              max_queue: int = 32, window_wall_s: float = 0.25,
+              recovery_slo_s: Optional[float] = None, schedule=None,
+              use_controller: bool = True, verbose: bool = True) -> Dict:
+    """One soak lane.  Returns the result dict (see CHAOS_LANE_KEYS)."""
+    import jax
+
+    if recovery_slo_s is None:
+        # a PERMANENT loss on the sharded lane recovers by failover
+        # restage — the moved buckets recompile, which on the forced
+        # host-device rig costs real seconds; transient recovery on the
+        # single-device lane is bounded by the fault duration itself
+        recovery_slo_s = 30.0 if n_devices >= 2 else 5.0
+
+    from repro.configs.ecg_zoo import ECG_LEADS, zoo_specs
+    from repro.control.faults import FaultPlane, wire_controller
+    from repro.control.swap import HotSwapper
+    from repro.control.telemetry import SloTelemetry
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.aggregator import DeviceIngest, ModalitySpec
+    from repro.serving.pipeline import EnsembleService, ZooMember
+    from repro.serving.server import EnsembleServer
+
+    n_devices = min(n_devices, jax.device_count())
+    rng = np.random.default_rng(seed)
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    pool = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+            for i, s in enumerate(specs)]
+    n = len(pool)
+    rich = np.ones(n, np.int8)
+    mid = np.zeros(n, np.int8)
+    mid[::2] = 1
+    cheap = np.zeros(n, np.int8)
+    cheap[0] = 1
+
+    member_costs = EnsembleService(pool).measured_costs(reps=1) \
+        if use_controller else None
+
+    swapper = HotSwapper(pool, rich, n_devices=n_devices,
+                         warmup_batch_sizes=(1, 2, 4, 8))
+    swapper.set_ladder([cheap, mid, rich])
+    telemetry = SloTelemetry(slo_seconds=slo, window_seconds=3.0)
+
+    schedule = schedule if schedule is not None \
+        else default_schedule(n_devices)
+    plane = FaultPlane(schedule, seed=seed)
+
+    # the member identity of each flush's service keys the oracle: a
+    # controller shed/climb or fault re-place mid-run changes WHICH
+    # selector scored a query, and the oracle must rescore with exactly
+    # that selector (placement is bitwise-irrelevant: bucket-granular
+    # plans reproduce the single-device scores exactly)
+    pool_ids = {id(m): i for i, m in enumerate(pool)}
+    flush_log: List = []            # (member_key, [qid], [score])
+    log_lock = threading.Lock()
+
+    def scoring(windows):
+        svc = swapper.facade.current
+        scores = list(svc.predict_batch(windows))
+        key = tuple(pool_ids[id(m)] for m in svc.members)
+        with log_lock:
+            flush_log.append(
+                (key, [w.extra["qid"] for w in windows], scores))
+        return scores
+
+    # heartbeat: the retry/failover wait inside protect() refreshes the
+    # watchdog deadline (late-bound; srv is created just below)
+    handler = plane.protect(scoring, swapper,
+                            heartbeat=lambda: srv.heartbeat())
+
+    def tier_of(patient):
+        return "critical" if patient % 3 == 0 else "stable"
+
+    srv = EnsembleServer(
+        batch_handler=lambda ws, tier=None: handler(ws),
+        n_workers=2, slo_seconds=slo, max_queue=max_queue,
+        max_batch=8, max_wait_ms=2.0, telemetry=telemetry,
+        tier_of=tier_of, tier_priority={"critical": 2, "stable": 0},
+        deadline_seconds=deadline).start()
+
+    ctl = wire_controller(telemetry, swapper, member_costs=member_costs,
+                          period_seconds=0.2) if use_controller else None
+
+    # logical ingest time: 1.0 "second" per window round (input_len
+    # samples at input_len Hz), decoupled from window_wall_s wall pacing
+    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS)],
+                      n_patients, window_seconds=1.0,
+                      capacity_windows=4.0)
+    di.warm_gather(sorted({s.input_len for s in specs}))
+
+    # arm LAST: the schedule clock starts when traffic starts, not while
+    # warmup is still compiling (at 8 forced devices warm-up alone can
+    # outlast the first scheduled fault, which would make every query in
+    # the run land on an already-lost device)
+    plane.arm(swapper)
+
+    qid = 0
+    oracle_windows: Dict[int, np.ndarray] = {}
+    submitted = 0
+    ring_rejected = 0
+    fault_recovery: Dict[int, Optional[float]] = {
+        i: None for i in range(len(schedule))}
+
+    def check_recoveries():
+        t_now = plane.now()
+        for i, ev in enumerate(schedule):
+            if fault_recovery[i] is not None:
+                continue
+            end = ev.t + ev.duration
+            if t_now <= end + 0.05:
+                continue
+            snap = telemetry.snapshot(
+                since=plane._armed_at + end + deadline)
+            # recovered = REAL scores flowing again under the SLO;
+            # NaN-failed retires also hit record_served, so subtract
+            # them — a watchdog NaN storm must not count as recovery
+            if snap.n_served - snap.n_failed >= 2 and snap.p99 <= slo:
+                fault_recovery[i] = t_now - end
+
+    zero_win = np.zeros((ECG_LEADS, input_len), np.float32)
+
+    def submit_ref(p, ref):
+        """Snapshot the ref's window AT SUBMIT TIME (the ring moves on;
+        the oracle must see what a timely flush would have gathered).
+        A ref closed with no fresh samples (the flood path) gathers the
+        zero-filled dropout window — no device round-trip needed, which
+        keeps the flood fast enough to actually overrun the queue."""
+        nonlocal submitted
+        qid_ = ref.extra["qid"]
+        if all(v == 0 for v in ref.valid.values()):
+            oracle_windows[qid_] = zero_win
+        else:
+            oracle_windows[qid_] = ref.host_window("ecg")
+        submitted += 1
+        srv.submit(p, ref)
+
+    def maybe_flood():
+        """During a backpressure episode, overrun the bounded queue with
+        stable-tier queries: the priority-aware ShedQueue must shed
+        these, never a critical.  (Re-closing an unchanged ring yields
+        the valid=0 all-zeros dropout window — a legitimate degenerate
+        query the oracle rescores like any other.)"""
+        nonlocal qid
+        if not plane.backpressure_active():
+            return
+        flood = [p for p in range(n_patients) if p % 3 != 0]
+        for _ in range(max(2, (2 * max_queue) // max(1, len(flood)))):
+            for p in flood:
+                ref = di.close_window(p, t_logical + 1.0,
+                                      extra={"qid": qid})
+                qid += 1
+                submit_ref(p, ref)
+
+    t_logical = 0.0
+    chunks = (100, 75, 75)
+    for _round in range(windows_per_patient):
+        for p in range(n_patients):
+            if di.headroom(p) < input_len:
+                # ring backpressure: feeding would push outstanding
+                # windows past the staleness guard — reject up front
+                ring_rejected += 1
+                continue
+            sig = rng.standard_normal(
+                (ECG_LEADS, input_len)).astype(np.float32)
+            off = 0
+            for k in chunks:
+                di.ingest(t_logical + off / input_len, p, "ecg",
+                          sig[:, off:off + k])
+                off += k
+            ref = di.close_window(p, t_logical + 1.0,
+                                  extra={"qid": qid})
+            qid += 1
+            submit_ref(p, ref)
+        maybe_flood()
+        t_logical += 1.0
+        check_recoveries()
+        time.sleep(window_wall_s)
+
+    # keep a light pulse flowing until the schedule has fully fired and
+    # every fault has had its recovery window measured
+    t_wait = time.monotonic() + recovery_slo_s + 2.0
+    while (not plane.done()
+           or any(v is None for v in fault_recovery.values())) \
+            and time.monotonic() < t_wait:
+        for p in range(min(2, n_patients)):
+            if srv.q.qsize() >= max(2, max_queue // 2):
+                break       # polite pulse: recovery measurement traffic
+                #             must not re-trigger backpressure shedding
+            if di.headroom(p) < input_len:
+                ring_rejected += 1
+                continue
+            sig = rng.standard_normal(
+                (ECG_LEADS, input_len)).astype(np.float32)
+            di.ingest(t_logical, p, "ecg", sig)
+            ref = di.close_window(p, t_logical + 1.0,
+                                  extra={"qid": qid})
+            qid += 1
+            submit_ref(p, ref)
+        maybe_flood()      # a late-scheduled backpressure episode must
+        #                    still be exercised after the main trace
+        t_logical += 1.0
+        check_recoveries()
+        time.sleep(window_wall_s)
+
+    srv.drain(timeout=30.0)
+    check_recoveries()
+    stats = srv.stop()
+    ctl_ok = ctl.stop() if ctl is not None else True
+    leaked = sorted({t.name for t in threading.enumerate()
+                     if t.is_alive() and t.name.startswith("repro-")})
+
+    # ---------------------------------------------------- invariants
+    results = []
+    while True:
+        batch = srv.results()
+        if not batch:
+            break
+        results.extend(batch)
+    n_real = sum(1 for _, s, _, _ in results if s == s)
+    n_nan = sum(1 for _, s, _, _ in results if s != s)
+    conservation_ok = (stats.served + stats.shed == submitted
+                       and len(results) == stats.served
+                       and n_real + n_nan == stats.served
+                       and n_nan == stats.failed)
+
+    # fault-free oracle: rescore each logged flush (same windows, same
+    # member selection, unsharded, no faults) and demand bitwise
+    # equality for every query that DELIVERED a real score
+    qid_flush: Dict[int, tuple] = {}
+    with log_lock:
+        for key, qids, scores in flush_log:
+            for q, s in zip(qids, scores):
+                qid_flush[q] = (key, qids, s)
+    oracle_cache: Dict[tuple, EnsembleService] = {}
+    oracle_scores: Dict[tuple, Dict[int, float]] = {}
+    bitwise_ok = True
+    n_checked = 0
+    for patient, score, _lat, ref in results:
+        if score != score:
+            continue                      # NaN-failed: conservation's job
+        q = ref.extra["qid"]
+        ent = qid_flush.get(q)
+        if ent is None:
+            bitwise_ok = False
+            break
+        key, qids, logged = ent
+        flush_id = (key, tuple(qids))
+        if flush_id not in oracle_scores:
+            svc = oracle_cache.get(key)
+            if svc is None:
+                svc = EnsembleService([pool[i] for i in key])
+                oracle_cache[key] = svc
+            want = svc.predict_batch(
+                [{"ecg": oracle_windows[x]} for x in qids])
+            oracle_scores[flush_id] = dict(zip(qids, want))
+        ok = (score == logged == oracle_scores[flush_id][q])
+        bitwise_ok = bitwise_ok and ok
+        n_checked += 1
+        if not ok:
+            break
+
+    recovery_s = [fault_recovery[i] for i in range(len(schedule))]
+    recovery_ok = all(r is not None and r <= recovery_slo_s
+                      for r in recovery_s)
+    no_leaked = (not leaked) and (not srv.leaked) and ctl_ok
+
+    out = {
+        "n_devices": n_devices, "n_patients": n_patients,
+        "windows_per_patient": windows_per_patient, "seed": seed,
+        "slo_s": slo, "deadline_s": deadline,
+        "schedule": [ev.to_dict() for ev in schedule],
+        "submitted": submitted, "ring_rejected": ring_rejected,
+        "served": stats.served, "served_real": n_real,
+        "failed": stats.failed, "rejected": stats.shed,
+        "rejected_by_tier": {str(k): v
+                             for k, v in stats.rejected.items()},
+        "critical_rejected": stats.rejected.get("critical", 0),
+        "stalls": stats.stalls,
+        "quarantined": [str(d) for d in swapper.quarantined],
+        "recoveries": plane.recoveries,
+        "controller": {
+            "enabled": use_controller,
+            "actions": [[round(t, 3), d.name] for t, d in ctl.log]
+            if ctl is not None else [],
+            "n_recomposes": ctl.n_recomposes if ctl is not None else 0},
+        "faults": [{**ev.to_dict(),
+                    "recovery_s": recovery_s[i]}
+                   for i, ev in enumerate(schedule)],
+        "p50_ms": stats.p(50) * 1e3, "p99_ms": stats.p(99) * 1e3,
+        "conservation_ok": bool(conservation_ok),
+        "bitwise_ok": bool(bitwise_ok), "n_bitwise_checked": n_checked,
+        "recovery_ok": bool(recovery_ok),
+        "no_leaked_threads": bool(no_leaked),
+        "leaked_threads": leaked + list(srv.leaked)
+        + (list(ctl.leaked) if ctl is not None else []),
+    }
+    if verbose:
+        print(f"\nchaos soak ({n_devices} device(s), "
+              f"{n_patients} patients x {windows_per_patient} windows):")
+        print(f"  submitted {submitted}  real {n_real}  failed "
+              f"{stats.failed}  rejected {stats.shed} "
+              f"(ring {ring_rejected})  stalls {stats.stalls}  "
+              f"quarantined {out['quarantined']}")
+        print(f"  conservation {conservation_ok}  bitwise {bitwise_ok} "
+              f"({n_checked} checked)  recovery {recovery_ok} "
+              f"{[None if r is None else round(r, 2) for r in recovery_s]}"
+              f"  no_leaked_threads {no_leaked}")
+    return out
+
+
+# ------------------------------------------------------------- schema
+def check_chaos_schema(lane: Dict) -> None:
+    """Gate one lane's result: every tracked key present, all four
+    whole-run invariants TRUE, and the schedule actually contained at
+    least one fault of each required kind."""
+    for k in CHAOS_LANE_KEYS:
+        assert k in lane, f"missing chaos lane key: {k}"
+    kinds = {ev["kind"] for ev in lane["schedule"]}
+    for k in FAULT_KINDS_REQUIRED:
+        assert k in kinds, f"schedule missing fault kind {k}"
+    for inv in ("conservation_ok", "bitwise_ok", "recovery_ok",
+                "no_leaked_threads"):
+        assert lane[inv] is True, f"invariant failed: {inv} ({lane})"
+    assert lane["n_bitwise_checked"] > 0, "oracle checked nothing"
+    assert lane["stalls"] >= 1, "worker stall never detected"
+    assert lane["rejected"] >= 1, "backpressure never shed anything"
+    assert lane["critical_rejected"] == 0, \
+        "a critical query was rejected"
+
+
+def check_chaos_file(path: str = BENCH_JSON) -> None:
+    """CI gate on the committed BENCH_chaos.json: both lanes present
+    and individually valid."""
+    with open(path) as f:
+        data = json.load(f)
+    for lane_name in ("single_device", "forced_8_device"):
+        assert lane_name in data, f"missing lane {lane_name}"
+        check_chaos_schema(data[lane_name])
+    assert data["forced_8_device"]["n_devices"] >= 2
+    assert data["forced_8_device"]["quarantined"], \
+        "multi-device lane never quarantined the lost device"
+    print(f"chaos schema OK ({path})")
+
+
+# ----------------------------------------------------- lane dispatch
+def _subprocess_lane(n_patients: int, windows: int,
+                     seed: int = 0) -> Dict:
+    """Run the forced-8-device lane in a subprocess (XLA device count
+    is fixed at jax init, so the multi-device lane needs its own
+    process)."""
+    import tempfile
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                        f"={N_FORCED}")
+    env.pop("PYTEST_CURRENT_TEST", None)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out_path = f.name
+    try:
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--emit",
+             out_path, "--devices", str(N_FORCED),
+             "--n-patients", str(n_patients),
+             "--windows", str(windows), "--seed", str(seed)],
+            cwd=repo, env=env, capture_output=True, text=True,
+            timeout=1200)
+        if r.returncode != 0:
+            raise RuntimeError("forced-8-device lane failed:\n"
+                               + (r.stdout or "")[-2000:]
+                               + (r.stderr or "")[-4000:])
+        with open(out_path) as f:
+            return json.load(f)
+    finally:
+        os.unlink(out_path)
+
+
+def _merge_bench_json(updates: Dict) -> None:
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            merged = json.load(f)
+    merged.update(updates)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-trace CI invocation: both lanes, schema "
+                         "gates, writes nothing")
+    ap.add_argument("--emit", default=None,
+                    help="run ONE lane in this process and write its "
+                         "result dict to this path (subprocess entry)")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--n-patients", type=int, default=None)
+    ap.add_argument("--windows", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.emit:
+        out = run_chaos(n_patients=args.n_patients or 6,
+                        windows_per_patient=args.windows or 10,
+                        n_devices=args.devices, seed=args.seed)
+        check_chaos_schema(out)
+        with open(args.emit, "w") as f:
+            json.dump(out, f, indent=2)
+    elif args.smoke:
+        lane1 = run_chaos(n_patients=args.n_patients or 4,
+                          windows_per_patient=args.windows or 8,
+                          n_devices=1, seed=args.seed)
+        check_chaos_schema(lane1)
+        lane8 = _subprocess_lane(args.n_patients or 4,
+                                 args.windows or 8, seed=args.seed)
+        check_chaos_schema(lane8)
+        assert lane8["n_devices"] >= 2 and lane8["quarantined"]
+        print("chaos smoke OK (single-device + forced-8-device lanes)")
+    else:
+        lane1 = run_chaos(n_patients=args.n_patients or 6,
+                          windows_per_patient=args.windows or 10,
+                          n_devices=1, seed=args.seed)
+        check_chaos_schema(lane1)
+        lane8 = _subprocess_lane(args.n_patients or 6,
+                                 args.windows or 10, seed=args.seed)
+        check_chaos_schema(lane8)
+        _merge_bench_json({"single_device": lane1,
+                           "forced_8_device": lane8})
+        check_chaos_file()

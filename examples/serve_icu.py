@@ -9,11 +9,18 @@ controller (shed / warm-started recompose / climb) with the trained zoo
 and measured member costs, and a real hot-swap segment shows selector
 swaps mid-stream with zero dropped queries.
 
+``--chaos`` runs a fault drill against the live fused server: a
+deterministic ``FaultPlane`` schedule injects a transient device loss,
+a worker stall, and a backpressure episode; the drill prints how each
+fault was absorbed — served late, NaN-failed by the watchdog, or
+counted rejected — with full query conservation.
+
     PYTHONPATH=src:. python examples/serve_icu.py [--beds 64] [--adaptive]
 """
 import argparse
 import sys
 import os
+import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
@@ -42,6 +49,10 @@ def main():
                     help="run the per-acuity-tier control plane: "
                          "stable beds shed first under the spike, "
                          "critical beds hold the rich ensemble")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run a deterministic fault drill against the "
+                         "live server: transient device loss, worker "
+                         "stall, backpressure — every query accounted")
     args = ap.parse_args()
 
     zoo, extras = build_zoo(n_patients=16, clips=8, steps=120)
@@ -138,6 +149,64 @@ def main():
           f"{(svc.h2d_bytes - h0) / max(stats2.served, 1):.0f} B/query"
           f" (vs {ECG_LEADS * clip_len * 4} B/query packed, "
           f"{len(members) * clip_len * 4} B/query pre-refactor)")
+
+    if args.chaos:
+        # chaos drill: the same fused service behind a watchdogged,
+        # priority-bounded server, with a seeded fault schedule fired
+        # against it.  The transient device loss is ridden out by the
+        # protect() retry loop (queries served LATE, heart-beating so
+        # the watchdog knows they are alive); the injected stall never
+        # heart-beats, so the watchdog NaN-fails that co-batch and
+        # respawns the worker; the backpressure episode floods stable
+        # beds and the priority queue sheds them first.
+        from repro.control.faults import FaultEvent, FaultPlane
+        schedule = [
+            FaultEvent(t=0.2, kind="device_loss", target=0, duration=0.6),
+            FaultEvent(t=1.0, kind="worker_stall", duration=0.8),
+            FaultEvent(t=1.6, kind="backpressure", duration=0.5),
+        ]
+        plane = FaultPlane(schedule)
+        guarded = plane.protect(lambda ws, *_tier: svc.predict_batch(ws),
+                                heartbeat=lambda: srv3.heartbeat())
+        srv3 = EnsembleServer(
+            batch_handler=guarded, n_workers=2, max_batch=4,
+            max_wait_ms=2.0, max_queue=8,
+            tier_of=lambda bed: "critical" if bed % 4 == 0 else "stable",
+            tier_priority={"critical": 1.0, "stable": 0.0},
+            deadline_seconds=0.5).start()
+        svc.dispatch_guard = plane.guard
+        plane.arm()           # clock starts AFTER all compilation above
+        submitted = 0
+        while plane.now() < 2.5 or not plane.done():
+            bed = submitted % n_demo
+            pp = sample_patient(rng, bed % 2)
+            win = {"ecg": ecg_clip(rng, pp, seconds=3)}
+            srv3.submit(bed, win)
+            submitted += 1
+            if plane.backpressure_active():   # overrun the stable tier
+                for b in range(n_demo):
+                    if b % 4 != 0:
+                        srv3.submit(b, win)
+                        submitted += 1
+            time.sleep(0.03)
+        stats3 = srv3.stop(join_timeout=5.0)
+        svc.dispatch_guard = None
+        rej = sum(stats3.rejected.values())
+        print(f"\nchaos drill (transient device loss, worker stall, "
+              f"backpressure):")
+        print(f"  submitted / served : {submitted} / {stats3.served}")
+        print(f"  NaN-failed (stall) : {stats3.failed}  "
+              f"(watchdog stalls {stats3.stalls})")
+        print(f"  rejected           : {rej} "
+              f"(critical {stats3.rejected.get('critical', 0)}, "
+              f"stable {stats3.rejected.get('stable', 0)})")
+        print(f"  conservation       : "
+              f"{stats3.served + stats3.shed == submitted} "
+              f"(served + shed == submitted)")
+        for r in plane.recoveries:
+            print(f"  recovery           : t={r['t']:.2f}s "
+                  f"{r['kind']} device {r['target']}")
+        print(f"  leaked threads     : {srv3.leaked or 'none'}")
 
     if args.tiered:
         # per-acuity-tier degradation: the same spike, but the unit of

@@ -14,10 +14,19 @@ TIER: per-tier (selector, placement) lanes over a shared staging cache
 and a priority-aware shed/climb policy (``TieredController``) under
 which stable beds shed first and critical beds hold the rich ensemble
 until the predicted bound leaves no alternative.
+
+``faults`` is the chaos side of the control plane: a deterministic
+``FaultPlane`` injects device loss / worker stalls / backpressure on a
+declarative schedule, and its recovery wiring (quarantine + re-place,
+watchdog NaN-fail + respawn, priority-aware shedding) is what the
+soak harness (``benchmarks/chaos_bench.py``) holds to zero-drop,
+zero-wrong-answer invariants.
 """
 from repro.control.controller import (AdaptiveController, ControllerConfig,
                                       Decision, TieredController,
                                       TieredControllerConfig)
+from repro.control.faults import (DeviceLostError, FaultEvent, FaultPlane,
+                                  wire_controller)
 from repro.control.swap import (HotSwapper, SelectorLadder, StagingCache,
                                 SwappableService)
 from repro.control.telemetry import (SloTelemetry, TelemetrySnapshot,
@@ -26,6 +35,8 @@ from repro.control.tiers import TIER_ORDER, TieredEnsemble, TierRegistry
 
 __all__ = ["AdaptiveController", "ControllerConfig", "Decision",
            "TieredController", "TieredControllerConfig",
+           "DeviceLostError", "FaultEvent", "FaultPlane",
+           "wire_controller",
            "HotSwapper", "SelectorLadder", "StagingCache",
            "SwappableService", "SloTelemetry", "TelemetrySnapshot",
            "TieredTelemetry", "TIER_ORDER", "TieredEnsemble",

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import logging
 import threading
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
@@ -52,6 +53,8 @@ import numpy as np
 from repro.control.swap import SelectorLadder, rungs_monotone
 from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
 from repro.serving.placement import placement_signature
+
+log = logging.getLogger(__name__)
 
 
 class Decision(enum.Enum):
@@ -130,6 +133,7 @@ class AdaptiveController:
         self._replace_thread: Optional[threading.Thread] = None
         self._monitor: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self.leaked: List[str] = []    # stragglers from the last stop()
 
     def _active_placement_sig(self) -> Optional[bytes]:
         return placement_signature(
@@ -242,7 +246,8 @@ class AdaptiveController:
 
         if self.sync:
             return run()
-        self._replace_thread = threading.Thread(target=run, daemon=True)
+        self._replace_thread = threading.Thread(
+            target=run, daemon=True, name="repro-ctl-replace")
         self._replace_thread.start()
         return True
 
@@ -263,7 +268,8 @@ class AdaptiveController:
                 self._recompose(snap)
             finally:
                 self._recomposing.clear()
-        self._recompose_thread = threading.Thread(target=run, daemon=True)
+        self._recompose_thread = threading.Thread(
+            target=run, daemon=True, name="repro-ctl-recompose")
         self._recompose_thread.start()
         return True
 
@@ -288,28 +294,59 @@ class AdaptiveController:
             # so rebalance the shards under the same selector
             self.swapper.re_place()
 
-    def join_recompose(self, timeout: float = 60.0) -> None:
+    def join_recompose(self, timeout: float = 60.0) -> bool:
+        """Wait for the background recompose to finish.  Returns True
+        iff no recompose thread is (still) running — a timed-out join is
+        reported, never silently swallowed."""
         t = self._recompose_thread
-        if t is not None:
-            t.join(timeout)
+        if t is None:
+            return True
+        t.join(timeout)
+        if t.is_alive():
+            log.warning("join_recompose: %s still running after %.1fs",
+                        t.name, timeout)
+            return False
+        return True
 
     # --------------------------------------------------- monitor loop
     def start(self, period_seconds: float = 1.0) -> "AdaptiveController":
+        """Run ``step()`` on a background monitor thread every
+        ``period_seconds`` — the live control loop.  Works against any
+        telemetry feed; wired to a real ``EnsembleServer`` via
+        ``control.faults.wire_controller`` (the server taps telemetry,
+        this loop actuates shed/climb/recompose/re-place on it)."""
         def loop():
             while not self._stop.wait(period_seconds):
                 self.step()
-        self._monitor = threading.Thread(target=loop, daemon=True)
+        self._monitor = threading.Thread(target=loop, daemon=True,
+                                         name="repro-ctl-monitor")
         self._monitor.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 5.0) -> bool:
+        """Stop the monitor loop and wait for every background thread
+        (monitor, recompose, replace).  Returns True iff they all
+        actually exited; stragglers are listed by name in
+        ``self.leaked`` and logged — a chaos harness treats a non-empty
+        list as a leaked-thread failure."""
         self._stop.set()
+        leaked: List[str] = []
         if self._monitor is not None:
-            self._monitor.join(timeout=5.0)
-        self.join_recompose(timeout=5.0)
+            self._monitor.join(timeout=timeout)
+            if self._monitor.is_alive():
+                leaked.append(self._monitor.name)
+        if not self.join_recompose(timeout=timeout):
+            leaked.append("repro-ctl-recompose")
         t = self._replace_thread
         if t is not None:
-            t.join(timeout=5.0)
+            t.join(timeout=timeout)
+            if t.is_alive():
+                leaked.append(t.name)
+        self.leaked = leaked
+        if leaked:
+            log.warning("controller stop(): threads still alive: %s",
+                        leaked)
+        return not leaked
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,338 @@
+"""Deterministic fault-injection plane + recovery wiring (chaos drills).
+
+HOLMES's claim is always-on sub-second scoring; what makes that claim
+believable is how the stack behaves when something breaks at 3am.  This
+module is the seeded, replayable "something breaks": a declarative
+schedule of ``FaultEvent``s that a ``FaultPlane`` fires against the
+live serving stack, plus the recovery wiring that turns each fault into
+a bounded, fully-accounted outcome instead of a wrong or missing score.
+
+Fault kinds and their recovery contracts:
+
+* ``device_loss`` — the plane's ``dispatch_guard`` (armed on every
+  ``EnsembleService`` a ``HotSwapper`` hands out, via ``service_hook``)
+  raises ``DeviceLostError`` the moment a flush would dispatch a bucket
+  onto the lost device.  ``protect()`` catches it in the server worker:
+  a PERMANENT loss (duration 0) quarantines the device —
+  ``HotSwapper.quarantine_device`` re-derives the placement over the
+  survivors and hot-swaps the active selector onto it — then the flush
+  retries on the recovered service; a TRANSIENT loss (duration > 0,
+  the only recoverable shape on a single-device pool) retries until the
+  plane restores the device.  Either way the co-batched queries are
+  served late, never dropped and never mis-scored.
+
+* ``worker_stall`` — ``protect()`` consumes a stall token and sleeps
+  ``duration`` inside exactly one worker's handler.  The server's
+  watchdog (``EnsembleServer(deadline_seconds=...)``) detects the hang,
+  retires the in-flight co-batch NaN (the standard failure score),
+  respawns the worker, and the staleness guards refuse any window the
+  stall outlived — a stalled query yields NaN, never a stale score.
+
+* ``backpressure`` — an advisory episode: while active, the trace
+  driver overruns the ingest side (``backpressure_active()``), and the
+  bounded ``ShedQueue`` + priority-aware admission shed the stable tier
+  first, counting every rejection in ``ServerStats``.
+
+Everything is driven by an injectable monotonic clock relative to
+``arm()`` time, so the same schedule replays identically run to run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+FAULT_KINDS = ("device_loss", "worker_stall", "backpressure")
+
+
+class DeviceLostError(RuntimeError):
+    """Raised by the armed dispatch guard when a flush would dispatch
+    onto a device the fault plane has marked lost."""
+
+    def __init__(self, device, index: int):
+        super().__init__(f"device {index} ({device}) lost")
+        self.device = device
+        self.index = index
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``t`` is seconds after ``arm()``;
+    ``target`` is a device index for ``device_loss`` (ignored
+    otherwise); ``duration`` is the stall length / backpressure episode
+    length / transient-loss length — 0 makes a device loss PERMANENT
+    (recovery must come from quarantine + re-placement, not from the
+    device coming back)."""
+    t: float
+    kind: str
+    target: int = 0
+    duration: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+
+    def to_dict(self) -> Dict:
+        return {"t": self.t, "kind": self.kind, "target": self.target,
+                "duration": self.duration}
+
+
+class FaultPlane:
+    """Seeded, declarative fault injector for the serving stack.
+
+    Usage::
+
+        plane = FaultPlane(schedule).arm(swapper)
+        handler = plane.protect(score_fn, swapper)   # server worker path
+        srv = EnsembleServer(batch_handler=..., deadline_seconds=0.25)
+
+    ``arm`` hooks the swapper so every staged ``EnsembleService`` gets
+    the plane's ``dispatch_guard`` — a swap mid-run cannot escape
+    injection — and starts the schedule clock.  All state transitions
+    are time-driven from the schedule (no randomness at fire time; the
+    seed exists for schedule *generators*), so a run is replayable.
+    """
+
+    def __init__(self, schedule: Sequence[FaultEvent], seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.schedule = sorted(schedule, key=lambda e: e.t)
+        self.seed = seed
+        self.clock = clock
+        self._lock = threading.RLock()
+        self._armed_at: Optional[float] = None
+        self._pending: List[FaultEvent] = list(self.schedule)
+        self._lost: Dict[int, FaultEvent] = {}     # device idx -> event
+        self._stalls: List[FaultEvent] = []        # unconsumed stall tokens
+        self._bp: List[FaultEvent] = []            # backpressure episodes
+        self.devices: List = []
+        self.fired: List[Tuple[float, FaultEvent]] = []
+        self.recoveries: List[Dict] = []           # what recovered, when, how
+        self.swapper = None
+        # one failover thread ever per lost device index: the worker
+        # that trips the loss starts it, every other worker (and every
+        # retry) just waits on it — presence in the dict marks the
+        # attempt so a failed quarantine is not re-run forever
+        self._failover_threads: Dict[int, threading.Thread] = {}
+
+    # ------------------------------------------------------------- arming
+    def arm(self, swapper=None, devices: Optional[Sequence] = None
+            ) -> "FaultPlane":
+        """Start the schedule clock and hook the serving stack: the
+        swapper's ``service_hook`` arms every service it stages (past
+        and future) with this plane's dispatch guard."""
+        import jax
+        self.devices = list(devices) if devices is not None \
+            else list(jax.devices())
+        self._armed_at = self.clock()
+        self.swapper = swapper
+        if swapper is not None:
+            swapper.service_hook = self._arm_service
+            self._arm_service(swapper.facade.current)
+        return self
+
+    def _arm_service(self, svc) -> None:
+        svc.dispatch_guard = self.guard
+
+    def now(self) -> float:
+        if self._armed_at is None:
+            raise RuntimeError("FaultPlane not armed")
+        return self.clock() - self._armed_at
+
+    # ------------------------------------------------------------- firing
+    def _tick(self) -> None:
+        with self._lock:
+            t = self.now()
+            while self._pending and self._pending[0].t <= t:
+                ev = self._pending.pop(0)
+                self.fired.append((t, ev))
+                log.info("fault fired at t=%.3f: %s", t, ev)
+                if ev.kind == "device_loss":
+                    self._lost[ev.target] = ev
+                elif ev.kind == "worker_stall":
+                    self._stalls.append(ev)
+                else:
+                    self._bp.append(ev)
+            # transient losses expire on their own (the device "reboots")
+            for idx, ev in list(self._lost.items()):
+                if ev.duration > 0 and t >= ev.t + ev.duration:
+                    del self._lost[idx]
+                    self.recoveries.append(
+                        {"t": t, "kind": "device_restored", "target": idx})
+
+    def _device_of(self, index: int):
+        return self.devices[index] if index < len(self.devices) else None
+
+    def guard(self, device) -> None:
+        """The ``EnsembleService.dispatch_guard``: called with the
+        bucket's pinned device (None = default device) immediately
+        before each stacked dispatch."""
+        self._tick()
+        with self._lock:
+            for idx, ev in self._lost.items():
+                dev = self._device_of(idx)
+                if device is dev or (device is None and idx == 0):
+                    raise DeviceLostError(dev, idx)
+
+    def stall_pending(self) -> float:
+        """Consume one due stall token; returns the stall duration (0.0
+        when none due).  Exactly one caller gets each token, so one
+        scheduled stall hangs exactly one worker."""
+        self._tick()
+        with self._lock:
+            if self._stalls:
+                return self._stalls.pop(0).duration
+        return 0.0
+
+    def backpressure_active(self) -> bool:
+        """True while a backpressure episode is in progress — the trace
+        driver's cue to overrun the ingest side."""
+        self._tick()
+        with self._lock:
+            t = self.now()
+            return any(ev.t <= t < ev.t + max(ev.duration, 1e-9)
+                       for ev in self._bp)
+
+    def active_losses(self) -> Dict[int, FaultEvent]:
+        self._tick()
+        with self._lock:
+            return dict(self._lost)
+
+    def done(self) -> bool:
+        self._tick()
+        with self._lock:
+            return not self._pending
+
+    # ----------------------------------------------------------- recovery
+    def _failover(self, err: DeviceLostError, swapper,
+                  beat: Callable[[], bool], retry_sleep: float) -> None:
+        """Quarantine the lost device in a SIDE thread while the
+        triggering worker heart-beats: a failover restage takes real
+        seconds (the moved buckets recompile), and a worker silently
+        blocked inside it would read as a hang to the server's watchdog
+        — its co-batch NaN-failed mid-recovery.  Exactly one thread is
+        ever started per device index; every other worker that trips
+        the same loss waits on it here."""
+        with self._lock:
+            th = self._failover_threads.get(err.index)
+            if th is None:
+                def _run():
+                    if swapper.quarantine_device(err.device):
+                        self.recoveries.append(
+                            {"t": self.now(), "kind": "quarantined",
+                             "target": err.index})
+                        log.info("quarantined device %d; re-placed "
+                                 "onto survivors", err.index)
+                    else:
+                        log.warning("quarantine of device %d failed "
+                                    "(no survivors?)", err.index)
+                th = threading.Thread(
+                    target=_run, name=f"repro-failover-{err.index}",
+                    daemon=True)
+                self._failover_threads[err.index] = th
+                th.start()
+        while th.is_alive():
+            beat()
+            th.join(retry_sleep)
+
+    def protect(self, score_fn: Callable, swapper=None,
+                heartbeat: Optional[Callable[[], bool]] = None,
+                retry_budget_s: float = 60.0,
+                retry_sleep: float = 0.02) -> Callable:
+        """Wrap a batch scoring function with stall injection and
+        device-loss recovery; the result is what the server's workers
+        call.
+
+        On ``DeviceLostError``: a permanent loss triggers
+        ``swapper.quarantine_device`` in a side thread (minimal-move
+        re-place onto survivors) and retries on the recovered facade; a
+        transient loss (or a pool with no survivor) retries on a short
+        sleep until the plane restores the device.  Throughout the wait
+        the wrapper calls ``heartbeat`` (pass the server's
+        ``heartbeat`` method) so the watchdog knows the co-batch is
+        alive and recovering — an injected STALL deliberately never
+        heart-beats, so the watchdog still catches real hangs.  The
+        co-batch is never dropped: either a retry eventually serves it,
+        or the ``retry_budget_s`` is exhausted and the raised error
+        lands in the server's NaN-isolation path — still accounted,
+        still never mis-scored.
+        """
+        swapper = swapper if swapper is not None else self.swapper
+
+        def beat() -> bool:
+            if heartbeat is None:
+                return True
+            try:
+                return bool(heartbeat())
+            except Exception:
+                return True
+
+        def guarded(windows, *rest):
+            dur = self.stall_pending()
+            if dur > 0:
+                log.info("injected worker stall: %.3fs", dur)
+                time.sleep(dur)       # silent: the watchdog MUST fire
+            t_give_up = time.monotonic() + retry_budget_s
+            last_err = None
+            while True:
+                try:
+                    return score_fn(windows, *rest)
+                except DeviceLostError as e:
+                    last_err = e
+                    if time.monotonic() >= t_give_up or not beat():
+                        raise last_err  # budget gone / co-batch already
+                    #                     abandoned: NaN-isolation path
+                    ev = self.active_losses().get(e.index)
+                    permanent = ev is not None and ev.duration == 0
+                    if permanent and swapper is not None:
+                        self._failover(e, swapper, beat, retry_sleep)
+                    else:
+                        time.sleep(retry_sleep)  # transient: wait it out
+
+        return guarded
+
+
+def wire_controller(telemetry, swapper, member_costs=None,
+                    config=None, recompose_fn=None,
+                    period_seconds: float = 0.25, sync: bool = False,
+                    start: bool = True):
+    """Run an ``AdaptiveController`` against a REAL ``EnsembleServer``:
+    the server taps ``telemetry`` (pass the same object to
+    ``EnsembleServer(telemetry=...)``), and the returned controller's
+    monitor loop actuates shed/climb/recompose/RE-PLACE on ``swapper``
+    from that live wall-clock feed — the end-to-end loop the DES only
+    simulated.
+
+    ``member_costs`` (per-member service seconds, e.g. from
+    ``EnsembleService.measured_bucket_costs``) powers the service
+    profile: mu from the active selector's total cost, T_s and
+    imbalance from the active placement's measured makespan.
+    """
+    from repro.control.controller import AdaptiveController
+
+    costs = None if member_costs is None \
+        else np.asarray(member_costs, np.float64)
+
+    def profile_fn():
+        sel = np.asarray(swapper.active_selector, bool)
+        pl = swapper.active_placement
+        imb = pl.imbalance if pl is not None else float("nan")
+        if costs is None:
+            return (float("inf"), 0.0, imb)
+        total = float(costs[sel].sum()) or 1e-9
+        n_dev = max(1, getattr(swapper, "n_devices", 1))
+        ts = pl.makespan if pl is not None else total
+        return (n_dev / total, ts, imb)
+
+    ctl = AdaptiveController(telemetry, swapper, recompose_fn=recompose_fn,
+                             config=config, service_profile_fn=profile_fn,
+                             sync=sync)
+    if start:
+        ctl.start(period_seconds=period_seconds)
+    return ctl

@@ -234,6 +234,12 @@ class HotSwapper(SelectorLadder):
                  staging: Optional[StagingCache] = None):
         super().__init__(initial_selector)
         self.pool = list(pool)
+        # fault-plane seam: when set, called with every service stage()
+        # hands out (including cache hits), so a chaos harness can arm
+        # each service's dispatch_guard no matter which swap installed it
+        self.service_hook: Optional[Callable] = None
+        self.quarantined: List = []        # devices removed by fault recovery
+        self._devices_gen = 0              # bumped by quarantine_device
         self.vitals_model = vitals_model
         self.labs_model = labs_model
         self.warmup_batch_sizes = tuple(warmup_batch_sizes)
@@ -335,12 +341,12 @@ class HotSwapper(SelectorLadder):
         with self._stage_lock:
             svc = self._staged.get(key)
         if svc is not None:
-            return svc
+            return self._arm(svc)
         with self._build_lock:
             with self._stage_lock:             # built while we waited?
                 svc = self._staged.get(key)
             if svc is not None:
-                return svc
+                return self._arm(svc)
             svc = EnsembleService.for_selector(
                 self.pool, sel, vitals_model=self.vitals_model,
                 labs_model=self.labs_model, fused=self.fused,
@@ -350,7 +356,13 @@ class HotSwapper(SelectorLadder):
                 svc.warmup(batch_sizes=self.warmup_batch_sizes)
             with self._stage_lock:
                 self._staged[key] = svc
-            return svc
+            return self._arm(svc)
+
+    def _arm(self, svc):
+        hook = self.service_hook
+        if hook is not None:
+            hook(svc)
+        return svc
 
     def set_ladder(self, selectors: Sequence[np.ndarray],
                    prestage: bool = True) -> None:
@@ -379,6 +391,7 @@ class HotSwapper(SelectorLadder):
         """
         with self._swap_lock:
             sel = self.active_selector.copy()
+            gen = self._devices_gen
         pl = placement if placement is not None \
             else self.placement_for(sel, fresh=True)
         if placement_signature(pl) \
@@ -389,6 +402,9 @@ class HotSwapper(SelectorLadder):
             if not np.array_equal(sel, self.active_selector):
                 return False   # raced a selector swap, whose own
                                # activation derived a fresh plan
+            if gen != self._devices_gen:
+                return False   # raced a device quarantine: this plan
+                               # may still reference the dead device
             with self._stage_lock:
                 self._placements[np.asarray(sel, np.int8).tobytes()] = pl
             self.facade.swap(svc)
@@ -396,6 +412,91 @@ class HotSwapper(SelectorLadder):
             self._staging.pin(self, self._skey(sel, pl))
             self._evict_stale(sel)
             return True
+
+    @staticmethod
+    def _failover_placement(old: Optional[Placement],
+                            dead_slot: int) -> Optional[Placement]:
+        """Minimal-move interim plan after losing ``dead_slot``: every
+        surviving slot keeps its members (their bucket programs are
+        already compiled on their devices — same fn, same shapes, same
+        device — so re-staging them is a jit-cache HIT, not a
+        recompile), and only the dead slot's members move, onto the
+        least-loaded survivor.  Deliberately unbalanced: failover
+        optimizes time-to-first-correct-score; the controller's
+        RE-PLACE rebalances in the background once the imbalance shows
+        up in its service profile."""
+        if old is None or not (0 <= dead_slot < old.n_slots) \
+                or old.n_slots < 2:
+            return None
+        assignment = [list(s) for s in old.assignment]
+        loads = list(old.loads)
+        moved, moved_load = assignment.pop(dead_slot), loads.pop(dead_slot)
+        j = int(np.argmin(loads))
+        assignment[j] = assignment[j] + moved
+        loads[j] += moved_load
+        return Placement(assignment=assignment, loads=loads)
+
+    def quarantine_device(self, device) -> bool:
+        """Remove a dead device from the pool and hot-swap the ACTIVE
+        selector onto a plan over the survivors — the device-loss
+        recovery path (``control.faults.FaultPlane``).
+
+        Two-phase: the swap lands on a MINIMAL-MOVE interim plan
+        (``_failover_placement`` — only the dead slot's members change
+        device, so staging re-uses the survivors' compiled bucket
+        programs and recovery costs one slot's worth of compilation,
+        not a full re-stage), and the proper LPT rebalance is left to
+        the controller's RE-PLACE action, which sees the interim plan's
+        imbalance in its service profile.  Only when no usable prior
+        plan exists does failover fall back to a full fresh derivation.
+
+        Returns False when failover is impossible: an unsharded
+        deployment (everything lives on the one default device) or a
+        device not in this swapper's pool.  No query is dropped on the
+        way through: the ingest queue and batcher are untouched, the
+        facade swap is atomic, and the flush that observed the loss
+        simply retries on the recovered service.
+
+        Every staged service and cached plan is invalidated wholesale —
+        any of them may pin stacked params on the dead device; lanes
+        sharing the staging cache restage lazily on their next swap.
+        """
+        if not self.sharded:
+            return False
+        import jax
+        with self._swap_lock:
+            devs = list(self.devices) if self.devices is not None \
+                else list(jax.devices())
+            if device not in devs or len(devs) <= 1:
+                return False
+            dead_slot = devs.index(device)
+            devs.remove(device)
+            self.devices = devs
+            self.n_devices = min(self.n_devices, len(devs))
+            self._devices_gen += 1
+            sel = self.active_selector.copy()
+            old_pl = self.active_placement
+        with self._stage_lock:
+            self._staged.clear()
+            self._placements.clear()
+        pl = self._failover_placement(old_pl, dead_slot)
+        if pl is None:
+            pl = self.placement_for(sel, fresh=True)
+        svc = self.stage(sel, pl)          # build/warm off the swap lock
+        with self._swap_lock:
+            if not np.array_equal(sel, self.active_selector):
+                # raced a shed/climb: restage for the NEW active so the
+                # live service is guaranteed off the dead device
+                sel = self.active_selector.copy()
+                pl = self.placement_for(sel, fresh=True)
+                svc = self.stage(sel, pl)
+            with self._stage_lock:
+                self._placements[np.asarray(sel, np.int8).tobytes()] = pl
+            self.facade.swap(svc)
+            self.active_placement = pl
+            self._staging.pin(self, self._skey(sel, pl))
+        self.quarantined.append(device)
+        return True
 
     def _evict_stale(self, active: np.ndarray) -> None:
         """Drop staged services that are neither active nor a ladder

@@ -60,6 +60,10 @@ class TelemetrySnapshot:
     # max/mean bucket load of the ACTIVE device placement (1.0 ==
     # balanced; nan when unsharded / no profile): the RE-PLACE signal
     placement_imbalance: float = float("nan")
+    # NaN-scored retirements (poisoned / stale / stall-killed queries)
+    # in the window: the chaos-drill health signal — served but carrying
+    # no usable score
+    n_failed: int = 0
 
     @property
     def predicted_latency(self) -> float:
@@ -79,6 +83,7 @@ class SloTelemetry:
         self._arrivals: Deque[float] = collections.deque()
         self._served: Deque[Tuple[float, float]] = collections.deque()
         self._shed: Deque[float] = collections.deque()
+        self._failed: Deque[float] = collections.deque()
         self._t0: Optional[float] = None       # first event ever seen
         self._hwm = -float("inf")              # newest event time seen
 
@@ -113,6 +118,18 @@ class SloTelemetry:
                 self._shed.append(t)
             self._prune(t)
 
+    def record_failure(self, t: Optional[float] = None,
+                       patient: Optional[int] = None) -> None:
+        """A query retired with a NaN score (server NaN-isolation or a
+        watchdog-killed co-batch): served for conservation purposes, but
+        no usable score was delivered."""
+        t = self.clock() if t is None else t
+        with self._lock:
+            self._note_t0(t)
+            if self._in_window(t):
+                self._failed.append(t)
+            self._prune(t)
+
     def _note_t0(self, t: float) -> None:
         if self._t0 is None:
             self._t0 = t
@@ -132,7 +149,7 @@ class SloTelemetry:
         # window behind the NEWEST event, i.e. memory is O(window)
         self._hwm = now = max(self._hwm, now)
         cut = now - self.window
-        for dq in (self._arrivals, self._shed):
+        for dq in (self._arrivals, self._shed, self._failed):
             while dq and dq[0] <= cut:
                 dq.popleft()
         while self._served and self._served[0][0] <= cut:
@@ -191,12 +208,14 @@ class SloTelemetry:
                 lat = np.asarray([l for _, l in self._served],
                                  np.float64)
                 n_shed = len(self._shed)
+                n_failed = len(self._failed)
             else:
                 arr = np.asarray([t for t in self._arrivals
                                   if t > since], np.float64)
                 lat = np.asarray([l for t, l in self._served
                                   if t > since], np.float64)
                 n_shed = sum(1 for t in self._shed if t > since)
+                n_failed = sum(1 for t in self._failed if t > since)
             start = now if self._t0 is None else self._t0
             if since is not None:
                 start = max(start, since)
@@ -216,7 +235,8 @@ class SloTelemetry:
             ts=float(ts) if mu is not None else float("nan"),
             tq_bound=tq,
             placement_imbalance=float(imbalance)
-            if imbalance is not None else float("nan"))
+            if imbalance is not None else float("nan"),
+            n_failed=n_failed)
 
 
 class TieredTelemetry:
@@ -291,6 +311,13 @@ class TieredTelemetry:
         t = self.clock() if t is None else t
         self.fleet.record_shed(t)
         self._slice(patient, tier).record_shed(t)
+
+    def record_failure(self, t: Optional[float] = None,
+                       patient: Optional[int] = None,
+                       tier: Optional[str] = None) -> None:
+        t = self.clock() if t is None else t
+        self.fleet.record_failure(t)
+        self._slice(patient, tier).record_failure(t)
 
     # ------------------------------------------------------------ read
     def tier(self, name: str) -> SloTelemetry:

@@ -327,6 +327,21 @@ class DeviceIngest:
         return DeviceWindowRef(ingest=self, patient=patient, ends=ends,
                                valid=valid, extra=dict(extra or {}))
 
+    def headroom(self, patient: int, modality: str = "ecg") -> int:
+        """Samples that can still be ingested before a ref closed at the
+        CURRENT mark would be overwritten in the ring (conservatively
+        assuming the ref needs a full ``want``-sample window).  The
+        ingest side's backpressure signal: at ``<= 0`` further feeding
+        will push outstanding windows past the staleness guard, so the
+        driver should reject (and count) new queries rather than let
+        them go stale-then-NaN downstream."""
+        st = self.states[modality]
+        cap = int(st.buf.shape[-1])
+        mark = int(self.mark[modality][patient])
+        fed = int(self.fed[modality][patient])
+        oldest = max(0, mark - self.want[modality])
+        return cap - (fed - oldest)
+
     def warm_gather(self, lens: Tuple[int, ...],
                     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8),
                     modality: str = "ecg") -> None:

@@ -212,6 +212,11 @@ class EnsembleService:
                     f"placement must cover every member exactly once: "
                     f"got {placed} for {len(self.members)} members")
         self.dispatch_count = 0
+        # fault-injection seam (control.faults.FaultPlane): when set,
+        # called with the bucket's pinned device (None = default) right
+        # before each stacked dispatch; raising DeviceLostError here is
+        # how a "device died mid-flush" materialises to the serving path
+        self.dispatch_guard: Optional[Callable] = None
         # ingest-side accounting for BENCH_serving.json["ingest"]:
         # bytes shipped host->device for flush inputs, and host seconds
         # spent building/transferring them (the marshaling cost)
@@ -439,7 +444,10 @@ class EnsembleService:
         cross-device gather."""
         score_mat = np.zeros((len(self.members), P))
         pending = []
+        guard = self.dispatch_guard
         for b in self._buckets:
+            if guard is not None:
+                guard(b.device)
             y = b.fn(b.stacked, dev_wins[(b.spec.input_len, b.device)])
             pending.append((b, y))                     # async dispatch
         with self._count_lock:
@@ -570,7 +578,10 @@ class EnsembleService:
         pending = []
         h2d = 0
         t_marshal = time.perf_counter()
+        guard = self.dispatch_guard
         for b in self._buckets:
+            if guard is not None:
+                guard(b.device)
             L = b.spec.input_len
             xs = np.zeros((len(b.idx), Ppad, L, 1), np.float32)
             for j, lead in enumerate(b.leads):
@@ -597,6 +608,8 @@ class EnsembleService:
     def _predict_one_unfused(self, windows: Dict[str, np.ndarray]
                              ) -> float:
         ecg = windows.get("ecg")
+        if self.dispatch_guard is not None:
+            self.dispatch_guard(None)       # unfused runs on the default
         score_mat = np.zeros((len(self.members), 1))
         for i, (m, fn) in enumerate(zip(self.members, self._fns)):
             L = m.spec.input_len

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import queue as _queue
 import threading
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
@@ -228,3 +229,104 @@ class KeyedMicroBatcher:
     def lane_stats(self) -> "Dict[Any, MicroBatchStats]":
         with self._lock:
             return {k: l.stats for k, l in self._lanes.items()}
+
+
+class ShedQueue:
+    """Bounded ingest queue whose bound covers UNFINISHED work, not just
+    queued items.
+
+    ``queue.Queue(maxsize=N)`` only bounds what sits in the queue proper;
+    the server's workers immediately drain it into micro-batcher lanes,
+    so under sustained backpressure the lanes grow without limit while
+    the queue reads empty.  ``ShedQueue`` bounds ``unfinished_tasks``
+    (queued + coalescing + in-flight) instead: admission is refused the
+    moment total outstanding work hits ``maxsize``, which is the number
+    that actually limits memory and staleness.
+
+    API-compatible with the ``queue.Queue`` subset ``EnsembleServer``
+    uses (``put_nowait``/``queue.Full``, ``get(timeout)``/
+    ``queue.Empty``, ``task_done``, ``all_tasks_done``,
+    ``unfinished_tasks``, ``empty``, ``qsize``), plus priority-aware
+    admission: ``put_evicting(item, priority, tag)`` evicts the
+    lowest-priority (then oldest) QUEUED item whose priority is strictly
+    below the newcomer's — so under overrun the stable tier sheds first
+    and a critical query is never bumped by a lesser one.  Eviction only
+    reaches items still in the queue; work already coalescing or
+    in-flight is past the admission boundary.
+    """
+
+    def __init__(self, maxsize: int = 0):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self.not_empty = threading.Condition(self._lock)
+        self.all_tasks_done = threading.Condition(self._lock)
+        self._q: Deque[Tuple[float, Any, Any]] = collections.deque()
+        self.unfinished_tasks = 0
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def empty(self) -> bool:
+        return self.qsize() == 0
+
+    def put_nowait(self, item: Any, priority: float = 0.0,
+                   tag: Any = None) -> None:
+        with self.not_empty:
+            if self.maxsize > 0 and self.unfinished_tasks >= self.maxsize:
+                raise _queue.Full
+            self._q.append((priority, tag, item))
+            self.unfinished_tasks += 1
+            self.not_empty.notify()
+
+    def put_evicting(self, item: Any, priority: float = 0.0,
+                     tag: Any = None) -> Tuple[bool, Optional[Tuple[Any, Any]]]:
+        """Admit ``item``, evicting a strictly lower-priority queued item
+        if full.  Returns ``(admitted, victim)`` where victim is the
+        ``(evicted_item, evicted_tag)`` pair or None.  The victim's
+        unfinished slot transfers to the newcomer, so conservation
+        accounting (one ``task_done`` per admitted-and-served item)
+        stays exact."""
+        with self.not_empty:
+            if self.maxsize <= 0 or self.unfinished_tasks < self.maxsize:
+                self._q.append((priority, tag, item))
+                self.unfinished_tasks += 1
+                self.not_empty.notify()
+                return True, None
+            best = None                 # (index, priority): lowest, oldest
+            for i, (pr, _tg, _it) in enumerate(self._q):
+                if pr < priority and (best is None or pr < best[1]):
+                    best = (i, pr)
+            if best is None:
+                return False, None
+            _pr, vtag, victim = self._q[best[0]]
+            del self._q[best[0]]
+            self._q.append((priority, tag, item))
+            # queue length and unfinished count are unchanged: the
+            # victim never gets a task_done — its slot is the newcomer's
+            self.not_empty.notify()
+            return True, (victim, vtag)
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        with self.not_empty:
+            if timeout is None:
+                while not self._q:
+                    self.not_empty.wait()
+            else:
+                deadline = time.monotonic() + timeout
+                while not self._q:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise _queue.Empty
+                    self.not_empty.wait(remaining)
+            _pr, _tg, item = self._q.popleft()
+            return item
+
+    def task_done(self) -> None:
+        with self.all_tasks_done:
+            unfinished = self.unfinished_tasks - 1
+            if unfinished < 0:
+                raise ValueError("task_done() called too many times")
+            self.unfinished_tasks = unfinished
+            if unfinished == 0:
+                self.all_tasks_done.notify_all()

@@ -26,12 +26,32 @@ served by exactly its tier's (selector, placement) service.  The
 telemetry tap always carries the patient id, so per-tier SLO slices
 (``control.telemetry.TieredTelemetry``) come for free.
 
+Fault tolerance:
+
+* the ingest queue is a ``ShedQueue`` bounding UNFINISHED work (queued
+  + coalescing + in-flight) at ``max_queue`` — the micro-batcher lanes
+  can no longer grow without limit under backpressure;
+* with ``tier_priority`` (tier -> numeric priority), overrun admission
+  is priority-aware: a higher-priority query evicts the oldest
+  lowest-priority queued one (stable tier sheds first), and a critical
+  query is never bumped by a lesser one.  Every rejection — incoming or
+  evicted — is counted in ``ServerStats`` (``shed`` plus the per-tier
+  ``rejected`` map) and tapped to telemetry; nothing is silently lost;
+* with ``deadline_seconds`` a watchdog thread bounds how long any
+  co-batch may be in-flight: a stalled worker's batch is retired NaN
+  (the existing failure score — downstream treats it exactly like a
+  poisoned query), the worker is marked abandoned and a replacement is
+  spawned.  When the stalled handler eventually returns, the abandoned
+  worker discards its late scores and exits, so every query is retired
+  exactly once and ``drain()`` conservation holds through stalls.
+
 The DES simulator (simulator.py) is the deterministic twin used by the
 latency profiler and benchmarks; this server is the "really runs" path
 the examples exercise (real jitted inference, real clocks).
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
@@ -39,7 +59,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.queues import NO_LANE, KeyedMicroBatcher, MicroBatcher
+from repro.serving.queues import (NO_LANE, KeyedMicroBatcher, MicroBatcher,
+                                  ShedQueue)
+
+log = logging.getLogger(__name__)
 
 
 class ServerStats:
@@ -47,25 +70,43 @@ class ServerStats:
     retired queries concurrently with readers: every mutation holds the
     internal lock, and ``p()``/``snapshot()`` copy the latency list
     under it, so percentile reads are snapshot-consistent instead of
-    racing ongoing appends."""
+    racing ongoing appends.
+
+    ``served`` counts every retired query including failures; ``failed``
+    is the NaN-scored subset (poisoned / stale / stall-killed), so
+    ``served - failed`` is the number of REAL scores delivered.
+    ``shed`` counts every rejected query, with the per-tier breakdown in
+    ``rejected`` (key None for untiered submits); ``stalls`` counts
+    watchdog-killed co-batches."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self.served = 0
         self.slo_violations = 0
         self.shed = 0
+        self.failed = 0
+        self.stalls = 0
+        self.rejected: Dict[object, int] = {}
         self.latencies: List[float] = []
 
-    def record(self, latency: float, violated: bool) -> None:
+    def record(self, latency: float, violated: bool,
+               failed: bool = False) -> None:
         with self._lock:
             self.served += 1
             self.latencies.append(latency)
             if violated:
                 self.slo_violations += 1
+            if failed:
+                self.failed += 1
 
-    def record_shed(self) -> None:
+    def record_shed(self, tier: object = None) -> None:
         with self._lock:
             self.shed += 1
+            self.rejected[tier] = self.rejected.get(tier, 0) + 1
+
+    def record_stall(self) -> None:
+        with self._lock:
+            self.stalls += 1
 
     @property
     def violation_rate(self) -> float:
@@ -98,18 +139,25 @@ class EnsembleServer:
                      Callable[[Sequence[Dict]], List[float]]] = None,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
                  telemetry=None,
-                 tier_of: Optional[Callable[[int], object]] = None):
+                 tier_of: Optional[Callable[[int], object]] = None,
+                 tier_priority: Optional[Dict[object, float]] = None,
+                 deadline_seconds: Optional[float] = None,
+                 watchdog_interval: float = 0.02):
         assert handler is not None or batch_handler is not None
         self.handler = handler
         self.batch_handler = batch_handler
         self.slo = slo_seconds
-        self.q: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self.q = ShedQueue(maxsize=max_queue)
         # tiered mode: per-tier coalescing lanes; batch_handler then
         # takes (windows, tier) so a flush is served by ITS tier only
         if tier_of is not None and batch_handler is None:
             raise ValueError("tier_of requires a batch_handler (the "
                              "scalar handler path has no tier routing)")
+        if tier_priority is not None and tier_of is None:
+            raise ValueError("tier_priority requires tier_of (priorities "
+                             "are keyed by acuity tier)")
         self.tier_of = tier_of
+        self.tier_priority = tier_priority
         self.batcher = (
             KeyedMicroBatcher(max_batch=max_batch, max_wait_ms=max_wait_ms)
             if self.tier_of is not None
@@ -118,28 +166,74 @@ class EnsembleServer:
         # control-plane tap (duck-typed control.telemetry.SloTelemetry):
         # every ingest is an arrival, every retired query a latency sample
         self.telemetry = telemetry
+        self.deadline = deadline_seconds
+        self._wd_interval = watchdog_interval
+        self._wd_lock = threading.Lock()
+        self._inflight: Dict[int, tuple] = {}    # ident -> (t0, tasks)
+        self._abandoned: set = set()             # idents killed by watchdog
         self._stop = threading.Event()
         self._results: "queue.Queue" = queue.Queue()
-        self._workers = [threading.Thread(target=self._run, daemon=True)
-                         for _ in range(n_workers)]
+        self._spawned = 0
+        self._workers = [self._make_worker() for _ in range(n_workers)]
+        self._watchdog = (
+            threading.Thread(target=self._watch, daemon=True,
+                             name="repro-watchdog")
+            if self.deadline is not None else None)
+        self.leaked: List[str] = []
+
+    def _make_worker(self) -> threading.Thread:
+        self._spawned += 1
+        return threading.Thread(target=self._run, daemon=True,
+                                name=f"repro-worker-{self._spawned}")
 
     def start(self) -> "EnsembleServer":
         for w in self._workers:
             w.start()
+        if self._watchdog is not None:
+            self._watchdog.start()
         return self
+
+    def _tier_and_priority(self, patient: int):
+        tier = None
+        if self.tier_of is not None:
+            try:
+                tier = self.tier_of(patient)
+            except Exception:
+                tier = None
+        prio = 0.0
+        if self.tier_priority is not None:
+            prio = float(self.tier_priority.get(tier, 0.0))
+        return tier, prio
 
     def submit(self, patient: int, windows: Dict,
                t_window: Optional[float] = None) -> bool:
         """Non-blocking ingest; returns False if the queue is full
-        (overload shedding rather than unbounded latency)."""
+        (overload shedding rather than unbounded latency).  With
+        ``tier_priority`` set, admission under overrun is priority-aware:
+        the newcomer may evict a strictly lower-priority queued query
+        (which is then counted shed) instead of being rejected itself."""
         t_window = t_window if t_window is not None else time.monotonic()
+        tier, prio = self._tier_and_priority(patient)
+        task = (patient, windows, t_window)
         try:
-            self.q.put_nowait((patient, windows, t_window))
+            if self.tier_priority is not None:
+                ok, victim = self.q.put_evicting(task, priority=prio,
+                                                 tag=tier)
+                if not ok:
+                    raise queue.Full
+                if victim is not None:
+                    vtask, vtier = victim
+                    self.stats.record_shed(vtier)
+                    if self.telemetry is not None:
+                        self.telemetry.record_shed(t_window,
+                                                   patient=vtask[0])
+            else:
+                self.q.put_nowait(task, priority=prio, tag=tier)
             if self.telemetry is not None:
                 self.telemetry.record_arrival(t_window, patient=patient)
             return True
         except queue.Full:
-            self.stats.record_shed()
+            self.stats.record_shed(tier)
             if self.telemetry is not None:
                 self.telemetry.record_shed(t_window, patient=patient)
             return False
@@ -149,12 +243,83 @@ class EnsembleServer:
         now = time.monotonic()
         for (patient, _w, t_window), score in zip(tasks, scores):
             lat = now - t_window
-            self.stats.record(lat, lat > self.slo)
+            failed = score != score           # NaN-safe for float/np
+            self.stats.record(lat, lat > self.slo, failed=failed)
             if self.telemetry is not None:
                 self.telemetry.record_served(lat, now, patient=patient)
-            self._results.put((patient, score, lat))
+                if failed:
+                    tap = getattr(self.telemetry, "record_failure", None)
+                    if tap is not None:
+                        tap(now, patient=patient)
+            self._results.put((patient, score, lat, _w))
         for _ in tasks:
             self.q.task_done()
+
+    # ----------------------------------------------------------- watchdog
+    def _begin_inflight(self, tasks: Sequence) -> None:
+        if self.deadline is None:
+            return
+        with self._wd_lock:
+            self._inflight[threading.get_ident()] = (time.monotonic(),
+                                                     list(tasks))
+
+    def heartbeat(self) -> bool:
+        """Refresh the calling worker's in-flight deadline.  For
+        handlers legitimately WAITING — a device-loss retry loop riding
+        out a failover restage — so the watchdog keeps catching silent
+        hangs without NaN-failing a co-batch that is alive and making
+        progress.  A genuinely stalled worker never calls this, which
+        is exactly the distinction the watchdog needs.  Returns False
+        when the watchdog already abandoned the co-batch (the caller's
+        scores will be discarded; it may stop retrying)."""
+        if self.deadline is None:
+            return True
+        me = threading.get_ident()
+        with self._wd_lock:
+            if me in self._inflight:
+                _, tasks = self._inflight[me]
+                self._inflight[me] = (time.monotonic(), tasks)
+                return True
+            return me not in self._abandoned
+
+    def _end_inflight(self) -> bool:
+        """Clear this worker's in-flight record.  Returns False when the
+        watchdog already gave up on the co-batch (retired it NaN and
+        respawned a replacement): the late scores must be DISCARDED and
+        the worker must exit, so each query retires exactly once."""
+        if self.deadline is None:
+            return True
+        me = threading.get_ident()
+        with self._wd_lock:
+            self._inflight.pop(me, None)
+            if me in self._abandoned:
+                self._abandoned.discard(me)
+                return False
+        return True
+
+    def _watch(self) -> None:
+        """Deadline enforcement: a co-batch in-flight longer than
+        ``deadline_seconds`` is failed safely (NaN scores — the same
+        path a poisoned flush takes) and its worker replaced.  Never
+        blocks on the stalled handler itself."""
+        while not self._stop.wait(self._wd_interval):
+            now = time.monotonic()
+            overdue = []
+            with self._wd_lock:
+                for ident, (t0, tasks) in list(self._inflight.items()):
+                    if now - t0 > self.deadline:
+                        del self._inflight[ident]
+                        self._abandoned.add(ident)
+                        overdue.append(tasks)
+            for tasks in overdue:
+                self.stats.record_stall()
+                log.warning("watchdog: co-batch of %d overran deadline "
+                            "%.3fs; failing NaN and respawning worker",
+                            len(tasks), self.deadline)
+                self._retire(tasks, [float("nan")] * len(tasks))
+                w = self._make_worker()
+                self._workers.append(w)
+                w.start()
 
     def _call_batch(self, windows: List[Dict], tier=None) -> List[float]:
         if self.tier_of is None:
@@ -212,8 +377,11 @@ class EnsembleServer:
                 tasks = self.batcher.pop_batch()
             if not tasks:
                 continue
+            self._begin_inflight(tasks)
             scores = self._safe_batch_scores([w for _, w, _ in tasks],
                                              tier)
+            if not self._end_inflight():
+                return                  # watchdog replaced this worker
             self._retire(tasks, scores)
 
     def _run(self) -> None:
@@ -224,13 +392,19 @@ class EnsembleServer:
                 task = self.q.get(timeout=0.05)
             except queue.Empty:
                 continue
+            self._begin_inflight([task])
             try:
                 score = self.handler(task[1])
             except Exception:
                 score = float("nan")
+            if not self._end_inflight():
+                return                  # watchdog replaced this worker
             self._retire([task], [score])
 
     def results(self, max_items: int = 0) -> List:
+        """Retired queries as ``(patient, score, latency, windows)``
+        tuples; ``windows`` is the submitted payload (its ``extra`` side
+        channel lets harnesses correlate results back to query ids)."""
         out = []
         while not self._results.empty() and (
                 not max_items or len(out) < max_items):
@@ -251,9 +425,20 @@ class EnsembleServer:
                     break
                 self.q.all_tasks_done.wait(min(0.05, remaining))
 
-    def stop(self) -> ServerStats:
+    def stop(self, join_timeout: float = 2.0) -> ServerStats:
+        """Drain, stop workers and watchdog, and report.  Threads that
+        failed to exit (e.g. a handler still stalled past the join
+        timeout) are listed by name in ``self.leaked`` and logged —
+        never silently ignored."""
         self.drain()
         self._stop.set()
-        for w in self._workers:
-            w.join(timeout=2.0)
+        threads = list(self._workers)
+        if self._watchdog is not None:
+            threads.append(self._watchdog)
+        for t in threads:
+            t.join(timeout=join_timeout)
+        self.leaked = [t.name for t in threads if t.is_alive()]
+        if self.leaked:
+            log.warning("server stop(): threads still alive: %s",
+                        self.leaked)
         return self.stats

@@ -303,7 +303,7 @@ def test_hot_swap_zero_drop_and_bitwise_equal(zoo_members, rng):
         assert srv.submit(i, windows[i])
     stats = srv.stop()
     assert stats.served == 24                 # zero dropped
-    scores = {p: s for p, s, _ in srv.results()}
+    scores = {p: s for p, s, *_ in srv.results()}
     cold = EnsembleService.for_selector(zoo_members, sel_b)
     for i in range(12, 24):
         assert scores[i] == cold.predict_batch([windows[i]])[0]
@@ -519,6 +519,46 @@ def test_controller_async_recompose_swaps():
     ctl.join_recompose(5.0)
     np.testing.assert_array_equal(lad.active_selector, _sel(4, [2, 3]))
     assert ctl.n_recomposes == 1
+
+
+def test_controller_stop_joins_all_threads():
+    """Satellite regression: stop() must actually wait for the monitor
+    AND any in-flight recompose, report success, and leave no
+    ``repro-ctl-*`` thread running."""
+    ctl, _ = _controller()
+    ctl.sync = False
+    ctl.start(period_seconds=0.02)
+    time.sleep(0.1)                      # a few monitor ticks
+    assert ctl.stop(timeout=5.0) is True
+    assert ctl.leaked == []
+    assert not any(t.name.startswith("repro-ctl-")
+                   for t in threading.enumerate() if t.is_alive())
+
+
+def test_controller_stop_reports_hung_recompose():
+    rungs = [_sel(4, [0]), _sel(4, [0, 1])]
+    lad = _NoopLadder(rungs[1])
+    lad.set_ladder(rungs)
+    tel = SloTelemetry(slo_seconds=1.0, window_seconds=30.0)
+    hang = threading.Event()
+
+    def hung_recompose(snap):
+        hang.wait(10.0)
+        return None
+
+    ctl = AdaptiveController(tel, lad, recompose_fn=hung_recompose,
+                             config=ControllerConfig(cooldown_seconds=0.0,
+                                                     min_samples=0),
+                             sync=False)
+    ctl.baseline_rate = 1.0
+    now = time.monotonic()
+    for k in range(30):
+        tel.record_arrival(now - k * 0.1)
+    ctl.step()                           # drift -> async recompose hangs
+    assert ctl.stop(timeout=0.2) is False
+    assert "repro-ctl-recompose" in ctl.leaked
+    hang.set()                           # let the daemon thread exit
+    ctl.join_recompose(5.0)
 
 
 # ----------------------------------------------------------- recompose

@@ -491,7 +491,7 @@ def test_server_serves_device_refs(zoo_members, rng):
         assert srv.submit(p, r)
     stats = srv.stop()
     assert stats.served == 12
-    for p, score, _ in srv.results():
+    for p, score, *_ in srv.results():
         # float tolerance: the server coalesces refs into flushes of
         # its own sizes, and different pow2 pads are different XLA
         # programs (same contract as the host-dict batching tests)
@@ -523,7 +523,7 @@ def test_hot_swap_zero_drop_with_device_refs(zoo_members, rng):
     stats = srv.stop()
     assert stats.served == 18              # zero dropped across the swap
     cold = EnsembleService.for_selector(zoo_members, sel_b)
-    scores = {p: s for p, s, _ in srv.results()}
+    scores = {p: s for p, s, *_ in srv.results()}
     for p in range(9, 18):
         assert scores[p] == cold.predict_batch([refs[p]])[0]
 

@@ -163,8 +163,8 @@ def test_server_batched_handler_serves_all():
     assert stats.served == n
     assert sum(seen_batches) == n
     got = sorted(srv.results())
-    assert [p for p, _, _ in got] == list(range(n))
-    for p, score, _ in got:
+    assert [p for p, *_ in got] == list(range(n))
+    for p, score, *_ in got:
         assert score == float(p)              # right answer to right query
     assert max(seen_batches) > 1              # coalescing actually happened
 
@@ -185,7 +185,7 @@ def test_server_batched_poison_query_isolated():
     stats = srv.stop()
     assert time.monotonic() - t0 < 5.0        # no drain-timeout hang
     assert stats.served == 8
-    scores = {p: s for p, s, _ in srv.results()}
+    scores = {p: s for p, s, *_ in srv.results()}
     assert np.isnan(scores[3])
     assert all(scores[p] == 1.0 for p in scores if p != 3)
 

@@ -318,7 +318,7 @@ def test_hot_swap_zero_drop_across_placement_changes(zoo_members, rng):
     assert sw.facade.swap_count == 2
     assert placement_signature(sw.active_placement) \
         == plans[2].signature()
-    scores = {p: s for p, s, _ in srv.results()}
+    scores = {p: s for p, s, *_ in srv.results()}
     cold = EnsembleService.for_selector(zoo_members, sel,
                                         placement=plans[2],
                                         devices=jax.devices())

@@ -459,7 +459,7 @@ def test_server_coalesces_within_tier_only():
     for tier, pids in flushes:
         assert all(reg.tier_of(p) == tier for p in pids)
     assert any(len(pids) > 1 for _, pids in flushes)   # did coalesce
-    scores = {p: s for p, s, _ in srv.results()}
+    scores = {p: s for p, s, *_ in srv.results()}
     for p in range(30):                        # answered by its tier
         assert scores[p] == float(reg.tier_of(p) == "critical")
 
