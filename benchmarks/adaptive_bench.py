@@ -108,7 +108,8 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
                      seed: int = 0,
                      compose_params: ComposerParams = None,
                      recompose_params: ComposerParams = None,
-                     verbose: bool = False) -> Dict:
+                     verbose: bool = False,
+                     telemetry_exact: bool = False) -> Dict:
     """Epoch-driven closed loop over the DES.  ``schedule`` is a list of
     (n_epochs, census) phases; the initial composition always targets
     the FIRST phase's census (that is the point: the static selector is
@@ -129,7 +130,8 @@ def run_adaptive_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
     swapper.set_ladder(_ladder_from(res0, costs))
     telemetry = SloTelemetry(slo_seconds=slo,
                              window_seconds=epoch_seconds,
-                             clock=lambda: 0.0)
+                             clock=lambda: 0.0,
+                             exact=telemetry_exact)
     state = {"warm": res0}
 
     def recompose_fn(snap):
@@ -236,7 +238,8 @@ def run_tiered_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
                    window_seconds: float = 10.0, n_devices: int = 2,
                    seed: int = 0, rho_max: float = 0.8,
                    compose_params: ComposerParams = None,
-                   verbose: bool = False) -> Dict:
+                   verbose: bool = False,
+                   telemetry_exact: bool = False) -> Dict:
     """The per-acuity-tier closed loop over the DES: every tier starts
     on the RICH composed ensemble; under the census spike the
     priority-aware controller sheds stable-tier rungs first (and floors
@@ -264,7 +267,8 @@ def run_tiered_sim(zoo: ModelZoo, costs: Sequence[float], f_a: Callable,
         lane.set_ladder(family)
     telemetry = TieredTelemetry(
         tier_of=lambda p: tiers[0], tiers=tiers, slo_seconds=slo,
-        window_seconds=epoch_seconds, clock=lambda: 0.0)
+        window_seconds=epoch_seconds, clock=lambda: 0.0,
+        exact=telemetry_exact)
     ctl = TieredController(
         telemetry, lanes, tier_order=tiers,
         config=TieredControllerConfig(slo_seconds=slo,

@@ -95,6 +95,7 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
     from repro.control.swap import HotSwapper
     from repro.control.telemetry import SloTelemetry
     from repro.models.ecg_resnext import init_ecg
+    from repro.obs.spans import SpanRecorder
     from repro.serving.aggregator import DeviceIngest, ModalitySpec
     from repro.serving.pipeline import EnsembleService, ZooMember
     from repro.serving.server import EnsembleServer
@@ -149,12 +150,13 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
     def tier_of(patient):
         return "critical" if patient % 3 == 0 else "stable"
 
+    tracer = SpanRecorder()
     srv = EnsembleServer(
         batch_handler=lambda ws, tier=None: handler(ws),
         n_workers=2, slo_seconds=slo, max_queue=max_queue,
         max_batch=8, max_wait_ms=2.0, telemetry=telemetry,
         tier_of=tier_of, tier_priority={"critical": 2, "stable": 0},
-        deadline_seconds=deadline).start()
+        deadline_seconds=deadline, tracer=tracer).start()
 
     ctl = wire_controller(telemetry, swapper, member_costs=member_costs,
                           period_seconds=0.2) if use_controller else None
@@ -371,6 +373,16 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
         "no_leaked_threads": bool(no_leaked),
         "leaked_threads": leaked + list(srv.leaked)
         + (list(ctl.leaked) if ctl is not None else []),
+    }
+    # span-trace digest (optional key — not part of the gated schema):
+    # under chaos the by_status mix is the interesting bit, e.g. the
+    # watchdog-killed co-batch shows up as status="watchdog" spans
+    att = tracer.attribution()
+    out["obs"] = {
+        "n_spans": att["n_spans"], "by_status": att["by_status"],
+        "coverage": round(att["coverage"], 4),
+        "stage_ms": {k: round(1e3 * v / max(att["n_spans"], 1), 3)
+                     for k, v in att["stage_seconds"].items()},
     }
     if verbose:
         print(f"\nchaos soak ({n_devices} device(s), "

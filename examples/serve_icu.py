@@ -53,6 +53,10 @@ def main():
                     help="run a deterministic fault drill against the "
                          "live server: transient device loss, worker "
                          "stall, backpressure — every query accounted")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach the observability plane to the fused "
+                         "serving demo: per-stage span attribution, a "
+                         "live /metrics scrape, and a JSONL span dump")
     args = ap.parse_args()
 
     zoo, extras = build_zoo(n_patients=16, clips=8, steps=120)
@@ -96,9 +100,16 @@ def main():
                for i in sel]
     svc = EnsembleService(members)
     svc.warmup(batch_sizes=(1, 2, 4, 8))      # pow2-padded flush sizes
+    tracer = telem = None
+    if args.metrics:
+        from repro.control.telemetry import SloTelemetry
+        from repro.obs.spans import SpanRecorder
+        tracer = SpanRecorder()
+        telem = SloTelemetry(slo_seconds=1.0, window_seconds=30.0)
     srv = EnsembleServer(batch_handler=svc.predict_batch,
                          n_workers=args.devices, max_batch=8,
-                         max_wait_ms=2.0).start()
+                         max_wait_ms=2.0, telemetry=telem,
+                         tracer=tracer).start()
     rng = np.random.default_rng(0)
     n_demo = min(args.beds, 16)
     d0 = svc.dispatch_count
@@ -115,6 +126,40 @@ def main():
           f"({(svc.dispatch_count - d0) / max(stats.served, 1):.2f}"
           f"/query; mean batch "
           f"{srv.batcher.stats.mean_batch:.1f})")
+
+    if args.metrics:
+        # where did each query's latency go? — the span recorder
+        # attributed every retired query across queue / coalesce /
+        # marshal / dispatch / gather, and the exporter publishes the
+        # same numbers as Prometheus text + JSONL traces
+        import tempfile
+        import urllib.request
+        from repro.obs.export import (MetricsExporter,
+                                      start_metrics_server,
+                                      write_spans_jsonl)
+        att = tracer.attribution()
+        stage_ms = {k: 1e3 * v / max(att["n_spans"], 1)
+                    for k, v in att["stage_seconds"].items()}
+        print(f"\nobservability plane ({att['n_spans']} spans, "
+              f"coverage {att['coverage']:.3f}):")
+        print("  per-query stage ms : "
+              + "  ".join(f"{k} {v:.2f}" for k, v in stage_ms.items()))
+        exporter = MetricsExporter(server=srv, telemetry=telem,
+                                   tracer=tracer, service=svc)
+        httpd = start_metrics_server(exporter, port=0)
+        try:
+            url = f"http://127.0.0.1:{httpd.server_port}/metrics"
+            with urllib.request.urlopen(url, timeout=10) as resp:
+                body = resp.read().decode()
+        finally:
+            httpd.shutdown()
+        n_series = sum(1 for ln in body.splitlines()
+                       if ln and not ln.startswith("#"))
+        print(f"  /metrics scrape    : {n_series} series from {url}")
+        with tempfile.NamedTemporaryFile(suffix=".jsonl",
+                                         delete=False) as f:
+            n = write_spans_jsonl(tracer, f.name)
+            print(f"  JSONL span dump    : {n} spans -> {f.name}")
 
     # device-resident ingest: the same beds stream 250-sample chunks
     # into on-device ring buffers; a closed window is submitted as a

@@ -46,7 +46,7 @@ import enum
 import logging
 import threading
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -213,6 +213,14 @@ class AdaptiveController:
         self._last_action_t = now
         self.log.append((now, decision))
         return decision
+
+    def decision_counts(self) -> Dict[str, int]:
+        """Actions taken so far, keyed by decision name (the exporter's
+        ``controller_decisions_total`` source)."""
+        out: Dict[str, int] = {}
+        for _t, d in list(self.log):
+            out[d.value] = out.get(d.value, 0) + 1
+        return out
 
     def _launch_replace(self) -> bool:
         """RE-PLACE: fresh costs -> fresh LPT plan -> hot-swap the same
@@ -557,3 +565,12 @@ class TieredController:
         if actions:
             self._last_action_t = now
         return actions
+
+    def decision_counts(self) -> Dict[str, int]:
+        """Actions taken so far, keyed by ``tier/decision`` (the
+        exporter's ``controller_decisions_total`` source)."""
+        out: Dict[str, int] = {}
+        for _t, tier, d in list(self.log):
+            key = f"{tier}/{d.value}"
+            out[key] = out.get(key, 0) + 1
+        return out

@@ -301,7 +301,8 @@ class FaultPlane:
 def wire_controller(telemetry, swapper, member_costs=None,
                     config=None, recompose_fn=None,
                     period_seconds: float = 0.25, sync: bool = False,
-                    start: bool = True):
+                    start: bool = True, exporter=None,
+                    on_step: Optional[Callable] = None):
     """Run an ``AdaptiveController`` against a REAL ``EnsembleServer``:
     the server taps ``telemetry`` (pass the same object to
     ``EnsembleServer(telemetry=...)``), and the returned controller's
@@ -313,6 +314,11 @@ def wire_controller(telemetry, swapper, member_costs=None,
     ``EnsembleService.measured_bucket_costs``) powers the service
     profile: mu from the active selector's total cost, T_s and
     imbalance from the active placement's measured makespan.
+
+    ``exporter`` (an ``obs.export.MetricsExporter``) is attached to the
+    returned controller so scrapes see live decision counters;
+    ``on_step(decision)`` is invoked after every control iteration —
+    the hook benches use to dump metrics on actuation.
     """
     from repro.control.controller import AdaptiveController
 
@@ -333,6 +339,24 @@ def wire_controller(telemetry, swapper, member_costs=None,
     ctl = AdaptiveController(telemetry, swapper, recompose_fn=recompose_fn,
                              config=config, service_profile_fn=profile_fn,
                              sync=sync)
+    if exporter is not None:
+        # scrapes read the live controller/telemetry from now on
+        exporter.controller = ctl
+        if exporter.telemetry is None:
+            exporter.telemetry = telemetry
+        ctl.exporter = exporter
+    if on_step is not None:
+        base_step = ctl.step
+
+        def stepped(now=None):
+            decision = base_step(now)
+            try:
+                on_step(decision)
+            except Exception:          # an observer must never kill
+                log.exception("wire_controller on_step hook failed")
+            return decision
+
+        ctl.step = stepped             # monitor loop resolves the attr
     if start:
         ctl.start(period_seconds=period_seconds)
     return ctl

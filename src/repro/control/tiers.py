@@ -142,6 +142,19 @@ class TieredEnsemble:
         violation."""
         return rungs_monotone(self.lanes, self.tiers)
 
+    def lane_metrics(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier lane state for the metrics exporter: current ladder
+        rung and active ensemble size."""
+        out: Dict[str, Dict[str, float]] = {}
+        for t in self.tiers:
+            lane = self.lanes[t]
+            sel = getattr(lane, "active_selector", None)
+            n_members = (float(np.asarray(sel).sum())
+                         if sel is not None else float("nan"))
+            out[t] = {"rung": float(lane.ladder_pos),
+                      "n_members": n_members}
+        return out
+
     # -------------------------------------------------------- data path
     def tier_of(self, patient: int) -> str:
         return self.registry.tier_of(patient)

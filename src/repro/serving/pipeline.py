@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.configs.ecg_zoo import (CLIP_SECONDS, ECG_HZ, ECG_LEADS,
                                    EcgModelSpec, VITALS_HZ, bucket_zoo)
+from repro.obs import spans as _spans
 from repro.launch.ensemble_parallel import stack_members
 from repro.models.ecg_resnext import ecg_apply, ecg_apply_stacked
 from repro.serving.aggregator import (DeviceIngest, DeviceWindowRef,
@@ -414,6 +415,7 @@ class EnsembleService:
             packs[L] = win
         dev_wins, h2d = self._ship_packs(packs)
         marshal_s = time.perf_counter() - t_marshal
+        _spans.note("marshal", marshal_s)
         scores = self._flush(dev_wins, P)
         with self._count_lock:
             self.h2d_bytes += h2d
@@ -445,6 +447,7 @@ class EnsembleService:
         score_mat = np.zeros((len(self.members), P))
         pending = []
         guard = self.dispatch_guard
+        t_dispatch = time.perf_counter()
         for b in self._buckets:
             if guard is not None:
                 guard(b.device)
@@ -452,9 +455,12 @@ class EnsembleService:
             pending.append((b, y))                     # async dispatch
         with self._count_lock:
             self.dispatch_count += len(pending)
+        t_gather = time.perf_counter()
+        _spans.note("dispatch", t_gather - t_dispatch)
         for b, y in pending:      # one sync point: cross-device gather
             score_mat[b.idx] = np.asarray(
                 jax.block_until_ready(y))[:, :P]
+        _spans.note("gather", time.perf_counter() - t_gather)
         return score_mat
 
     def _predict_refs(self, batch: Sequence[DeviceWindowRef]
@@ -514,6 +520,7 @@ class EnsembleService:
             packs[L] = gather_windows(state.buf, pj, ej, vj, L)
         dev_wins, _ = self._ship_packs(packs)   # D2D for remote shards
         marshal_s = time.perf_counter() - t_marshal
+        _spans.note("marshal", marshal_s)
         scores = self._flush(dev_wins, P)
         with self._count_lock:
             self.h2d_bytes += h2d
@@ -596,13 +603,18 @@ class EnsembleService:
             y = b.fn(b.stacked, x)
             pending.append((b, y))                     # async dispatch
         marshal_s = time.perf_counter() - t_marshal
+        # legacy interleaves marshal + dispatch per bucket; attribute
+        # the whole pre-gather segment to marshal
+        _spans.note("marshal", marshal_s)
         with self._count_lock:
             self.dispatch_count += len(pending)
             self.h2d_bytes += h2d
             self.marshal_seconds += marshal_s
+        t_gather = time.perf_counter()
         for b, y in pending:      # one sync point: cross-device gather
             score_mat[b.idx] = np.asarray(
                 jax.block_until_ready(y))[:, :P]
+        _spans.note("gather", time.perf_counter() - t_gather)
         return self._combine(score_mat, batch)
 
     def _predict_one_unfused(self, windows: Dict[str, np.ndarray]
@@ -696,6 +708,9 @@ class ServedQuery:
     t_window: float
     t_done: float
     score: float
+    # per-stage service attribution (obs.spans stage keys -> seconds),
+    # populated when the pipeline serves under span collection
+    stages: Optional[Dict[str, float]] = None
 
     @property
     def latency(self) -> float:
@@ -724,7 +739,8 @@ class StreamingPipeline:
                  window_seconds: float = float(CLIP_SECONDS),
                  tier_of: Optional[Callable[[int], str]] = None,
                  device_ingest: bool = False,
-                 capacity_windows: float = 2.0):
+                 capacity_windows: float = 2.0,
+                 trace_stages: bool = False):
         mods = [ModalitySpec("ecg", ECG_HZ, ECG_LEADS),
                 ModalitySpec("vitals", VITALS_HZ, 7)]
         self.service = service
@@ -754,6 +770,7 @@ class StreamingPipeline:
                          for _ in range(n_patients)]
         self.labs_cache: Dict[int, np.ndarray] = {}
         self.records: List[ServedQuery] = []
+        self.trace_stages = trace_stages
 
     def _close(self, t: float, patient: int):
         """The closed window in whichever representation the ingest
@@ -785,13 +802,22 @@ class StreamingPipeline:
                 return None
         windows = self._close(t, patient)
         t0 = time.perf_counter()
-        if self.tier_of is not None:
+        stages: Optional[Dict[str, float]] = None
+        if self.trace_stages:
+            with _spans.collect() as acc:
+                if self.tier_of is not None:
+                    score = self.service.predict(windows,
+                                                 self.tier_of(patient))
+                else:
+                    score = self.service.predict(windows)
+            stages = dict(acc)
+        elif self.tier_of is not None:
             score = self.service.predict(windows, self.tier_of(patient))
         else:
             score = self.service.predict(windows)
         wall = time.perf_counter() - t0
         rec = ServedQuery(patient=patient, t_window=t, t_done=t + wall,
-                          score=score)
+                          score=score, stages=stages)
         self.records.append(rec)
         return rec
 

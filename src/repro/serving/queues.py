@@ -262,6 +262,10 @@ class ShedQueue:
         self.all_tasks_done = threading.Condition(self._lock)
         self._q: Deque[Tuple[float, Any, Any]] = collections.deque()
         self.unfinished_tasks = 0
+        # admission counters (export surface; guarded by _lock)
+        self.n_admitted = 0
+        self.n_evicted = 0
+        self.n_rejected = 0
 
     def qsize(self) -> int:
         with self._lock:
@@ -274,9 +278,11 @@ class ShedQueue:
                    tag: Any = None) -> None:
         with self.not_empty:
             if self.maxsize > 0 and self.unfinished_tasks >= self.maxsize:
+                self.n_rejected += 1
                 raise _queue.Full
             self._q.append((priority, tag, item))
             self.unfinished_tasks += 1
+            self.n_admitted += 1
             self.not_empty.notify()
 
     def put_evicting(self, item: Any, priority: float = 0.0,
@@ -291,6 +297,7 @@ class ShedQueue:
             if self.maxsize <= 0 or self.unfinished_tasks < self.maxsize:
                 self._q.append((priority, tag, item))
                 self.unfinished_tasks += 1
+                self.n_admitted += 1
                 self.not_empty.notify()
                 return True, None
             best = None                 # (index, priority): lowest, oldest
@@ -298,10 +305,13 @@ class ShedQueue:
                 if pr < priority and (best is None or pr < best[1]):
                     best = (i, pr)
             if best is None:
+                self.n_rejected += 1
                 return False, None
             _pr, vtag, victim = self._q[best[0]]
             del self._q[best[0]]
             self._q.append((priority, tag, item))
+            self.n_admitted += 1
+            self.n_evicted += 1
             # queue length and unfinished count are unchanged: the
             # victim never gets a task_done — its slot is the newcomer's
             self.not_empty.notify()

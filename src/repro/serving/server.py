@@ -59,10 +59,33 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import spans as _spans
 from repro.serving.queues import (NO_LANE, KeyedMicroBatcher, MicroBatcher,
                                   ShedQueue)
 
 log = logging.getLogger(__name__)
+
+
+class Task:
+    """One submitted query in flight through the server.  Replaces the
+    old ``(patient, windows, t_window)`` tuple so the span stamps the
+    tracer needs ride the object itself instead of a side table.  All
+    fields except the first three are stamped lazily on the trace
+    path; ``__slots__`` keeps the per-query footprint tuple-sized."""
+
+    __slots__ = ("patient", "windows", "t_window", "tier",
+                 "t_dequeue", "t_flush", "batch_n", "stages")
+
+    def __init__(self, patient: int, windows: Dict, t_window: float,
+                 tier: object = None):
+        self.patient = patient
+        self.windows = windows
+        self.t_window = t_window
+        self.tier = tier
+        self.t_dequeue = t_window
+        self.t_flush = t_window
+        self.batch_n = 1
+        self.stages: Optional[Dict[str, float]] = None
 
 
 class ServerStats:
@@ -142,7 +165,8 @@ class EnsembleServer:
                  tier_of: Optional[Callable[[int], object]] = None,
                  tier_priority: Optional[Dict[object, float]] = None,
                  deadline_seconds: Optional[float] = None,
-                 watchdog_interval: float = 0.02):
+                 watchdog_interval: float = 0.02,
+                 tracer: Optional["_spans.SpanRecorder"] = None):
         assert handler is not None or batch_handler is not None
         self.handler = handler
         self.batch_handler = batch_handler
@@ -166,6 +190,9 @@ class EnsembleServer:
         # control-plane tap (duck-typed control.telemetry.SloTelemetry):
         # every ingest is an arrival, every retired query a latency sample
         self.telemetry = telemetry
+        # span tracer (obs.spans.SpanRecorder): when set, every retired
+        # query emits a lifecycle SpanRecord with stage attribution
+        self.tracer = tracer
         self.deadline = deadline_seconds
         self._wd_interval = watchdog_interval
         self._wd_lock = threading.Lock()
@@ -214,7 +241,7 @@ class EnsembleServer:
         (which is then counted shed) instead of being rejected itself."""
         t_window = t_window if t_window is not None else time.monotonic()
         tier, prio = self._tier_and_priority(patient)
-        task = (patient, windows, t_window)
+        task = Task(patient, windows, t_window, tier)
         try:
             if self.tier_priority is not None:
                 ok, victim = self.q.put_evicting(task, priority=prio,
@@ -226,7 +253,7 @@ class EnsembleServer:
                     self.stats.record_shed(vtier)
                     if self.telemetry is not None:
                         self.telemetry.record_shed(t_window,
-                                                   patient=vtask[0])
+                                                   patient=vtask.patient)
             else:
                 self.q.put_nowait(task, priority=prio, tag=tier)
             if self.telemetry is not None:
@@ -239,19 +266,32 @@ class EnsembleServer:
             return False
 
     # ------------------------------------------------------------ workers
-    def _retire(self, tasks: Sequence, scores: Sequence[float]) -> None:
+    def _retire(self, tasks: Sequence, scores: Sequence[float],
+                cause: Optional[str] = None) -> None:
         now = time.monotonic()
-        for (patient, _w, t_window), score in zip(tasks, scores):
-            lat = now - t_window
+        for task, score in zip(tasks, scores):
+            lat = now - task.t_window
             failed = score != score           # NaN-safe for float/np
             self.stats.record(lat, lat > self.slo, failed=failed)
             if self.telemetry is not None:
-                self.telemetry.record_served(lat, now, patient=patient)
+                self.telemetry.record_served(lat, now,
+                                             patient=task.patient)
                 if failed:
                     tap = getattr(self.telemetry, "record_failure", None)
                     if tap is not None:
-                        tap(now, patient=patient)
-            self._results.put((patient, score, lat, _w))
+                        tap(now, patient=task.patient)
+            if self.tracer is not None:
+                st = task.stages or {}
+                self.tracer.record(_spans.SpanRecord(
+                    patient=task.patient, tier=task.tier,
+                    status=cause or ("failed" if failed else "ok"),
+                    t_submit=task.t_window, t_dequeue=task.t_dequeue,
+                    t_flush=task.t_flush, t_retire=now,
+                    batch_n=task.batch_n,
+                    marshal_s=st.get("marshal", 0.0),
+                    dispatch_s=st.get("dispatch", 0.0),
+                    gather_s=st.get("gather", 0.0)))
+            self._results.put((task.patient, score, lat, task.windows))
         for _ in tasks:
             self.q.task_done()
 
@@ -316,7 +356,8 @@ class EnsembleServer:
                 log.warning("watchdog: co-batch of %d overran deadline "
                             "%.3fs; failing NaN and respawning worker",
                             len(tasks), self.deadline)
-                self._retire(tasks, [float("nan")] * len(tasks))
+                self._retire(tasks, [float("nan")] * len(tasks),
+                             cause="watchdog")
                 w = self._make_worker()
                 self._workers.append(w)
                 w.start()
@@ -346,10 +387,13 @@ class EnsembleServer:
         # max_wait); block at the long timeout when idle
         coalesce_poll = min(0.05, self.batcher.max_wait / 2 or 0.05)
         tiered = self.tier_of is not None
+        tracing = self.tracer is not None
         while not self._stop.is_set():
             timeout = 0.05 if not len(self.batcher) else coalesce_poll
             try:
                 task = self.q.get(timeout=timeout)
+                if tracing:
+                    task.t_dequeue = time.monotonic()
                 if tiered:
                     # the tier is sampled at ROUTING time: a mid-queue
                     # escalation moves the patient's NEXT queries.  A
@@ -357,9 +401,10 @@ class EnsembleServer:
                     # strand the popped query — route to the default
                     # lane (None: TierRouter/TieredEnsemble fall back)
                     try:
-                        key = self.tier_of(task[0])
+                        key = self.tier_of(task.patient)
                     except Exception:
                         key = None
+                    task.tier = key
                     self.batcher.push(key, task)
                 else:
                     self.batcher.push(task)
@@ -377,9 +422,22 @@ class EnsembleServer:
                 tasks = self.batcher.pop_batch()
             if not tasks:
                 continue
-            self._begin_inflight(tasks)
-            scores = self._safe_batch_scores([w for _, w, _ in tasks],
-                                             tier)
+            windows = [t.windows for t in tasks]
+            if tracing:
+                # the stamps/sink are per co-batch: every rider shares
+                # the flush time and the handler's stage attribution
+                t_flush = time.monotonic()
+                for t in tasks:
+                    t.t_flush = t_flush
+                    t.batch_n = len(tasks)
+                self._begin_inflight(tasks)
+                with _spans.collect() as acc:
+                    scores = self._safe_batch_scores(windows, tier)
+                for t in tasks:
+                    t.stages = acc
+            else:
+                self._begin_inflight(tasks)
+                scores = self._safe_batch_scores(windows, tier)
             if not self._end_inflight():
                 return                  # watchdog replaced this worker
             self._retire(tasks, scores)
@@ -387,16 +445,28 @@ class EnsembleServer:
     def _run(self) -> None:
         if self.batch_handler is not None:
             return self._run_batched()
+        tracing = self.tracer is not None
         while not self._stop.is_set():
             try:
                 task = self.q.get(timeout=0.05)
             except queue.Empty:
                 continue
-            self._begin_inflight([task])
-            try:
-                score = self.handler(task[1])
-            except Exception:
-                score = float("nan")
+            if tracing:
+                # scalar path has no coalesce stage: dequeue == flush
+                task.t_dequeue = task.t_flush = time.monotonic()
+                self._begin_inflight([task])
+                try:
+                    with _spans.collect() as acc:
+                        score = self.handler(task.windows)
+                except Exception:
+                    score = float("nan")
+                task.stages = acc
+            else:
+                self._begin_inflight([task])
+                try:
+                    score = self.handler(task.windows)
+                except Exception:
+                    score = float("nan")
             if not self._end_inflight():
                 return                  # watchdog replaced this worker
             self._retire([task], [score])

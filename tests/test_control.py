@@ -13,6 +13,7 @@ from repro.control.controller import (AdaptiveController, ControllerConfig,
                                       Decision)
 from repro.control.swap import HotSwapper, SelectorLadder, SwappableService
 from repro.control.telemetry import SloTelemetry, TelemetrySnapshot
+from repro.obs.sketch import REL_ERR_BOUND
 from repro.core.composer import ComposerParams, compose, recompose
 from repro.serving.latency import arrival_curve, queueing_bound
 from repro.serving.pipeline import EnsembleService
@@ -87,25 +88,33 @@ def test_server_stats_shed_counter():
 
 
 # ----------------------------------------------------------- telemetry
-def test_telemetry_sliding_window_and_rates():
+@pytest.mark.parametrize("exact", [True, False])
+def test_telemetry_sliding_window_and_rates(exact):
     t = [0.0]
     tel = SloTelemetry(slo_seconds=0.5, window_seconds=10.0,
-                      clock=lambda: t[0])
+                       clock=lambda: t[0], exact=exact)
     for k in range(20):                       # one arrival per second
         tel.record_arrival(float(k))
         tel.record_served(0.1 if k < 18 else 0.9, float(k))
     t[0] = 20.0
     snap = tel.snapshot()
+    # counts/rates are EXACT under both engines; quantiles carry the
+    # sketch's histogram relative-error bound
     assert snap.n_arrivals == 9               # (10, 20] survive the window
     assert snap.arrival_rate == pytest.approx(0.9)
     assert snap.n_served == 9
     assert snap.violation_rate == pytest.approx(2 / 9)  # k=18,19 > SLO
-    assert snap.p50 == pytest.approx(0.1)
-    assert snap.p99 >= 0.5
+    q_rel = 1e-6 if exact else REL_ERR_BOUND
+    assert snap.p50 == pytest.approx(0.1, rel=q_rel)
+    assert snap.p99 >= 0.5 * (1.0 - q_rel)
 
 
 def test_telemetry_online_arrival_curve_and_tq():
-    tel = SloTelemetry(window_seconds=100.0, clock=lambda: 50.0)
+    # exact=True: this pins bitwise equality against the raw-trace
+    # curve/bound (the sketch's bucketed counterpart is bounded in
+    # tests/test_obs.py)
+    tel = SloTelemetry(window_seconds=100.0, clock=lambda: 50.0,
+                       exact=True)
     rng = np.random.default_rng(0)
     arr = np.sort(rng.uniform(0, 50, 40))
     for a in arr:
@@ -123,10 +132,11 @@ def test_telemetry_online_arrival_curve_and_tq():
 def test_telemetry_memory_is_o_window_not_o_trace():
     """Regression: raw timestamps are pruned on RECORD against the
     high-water mark, so a week-long trace holds only the sliding
-    window's events — memory is O(window), not O(trace) (first step
-    toward the ROADMAP arrival-curve sketch)."""
+    window's events — the EXACT oracle's memory is O(window), not
+    O(trace).  (The default sketch engine is O(1); see
+    tests/test_obs.py.)"""
     tel = SloTelemetry(slo_seconds=0.5, window_seconds=10.0,
-                       clock=lambda: 0.0)
+                       clock=lambda: 0.0, exact=True)
     n, rate = 50_000, 5.0            # 10_000 s of trace, 5 events/s
     for k in range(n):
         t = k / rate
