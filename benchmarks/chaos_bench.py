@@ -163,7 +163,12 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
 
     # logical ingest time: 1.0 "second" per window round (input_len
     # samples at input_len Hz), decoupled from window_wall_s wall pacing
-    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS)],
+    # vitals ride along so ring backpressure reflects the TIGHTEST
+    # modality, not just ecg: headroom(p) aggregates min across rings
+    # in window units (< 1.0 = can't absorb one more window)
+    vitals_hz, vitals_ch = 5.0, 6
+    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS),
+                       ModalitySpec("vitals", vitals_hz, vitals_ch)],
                       n_patients, window_seconds=1.0,
                       capacity_windows=4.0)
     di.warm_gather(sorted({s.input_len for s in specs}))
@@ -235,9 +240,10 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
     chunks = (100, 75, 75)
     for _round in range(windows_per_patient):
         for p in range(n_patients):
-            if di.headroom(p) < input_len:
+            if di.headroom(p) < 1.0:
                 # ring backpressure: feeding would push outstanding
-                # windows past the staleness guard — reject up front
+                # windows past the staleness guard in SOME modality —
+                # reject up front (aggregate min, window units)
                 ring_rejected += 1
                 continue
             sig = rng.standard_normal(
@@ -247,6 +253,8 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
                 di.ingest(t_logical + off / input_len, p, "ecg",
                           sig[:, off:off + k])
                 off += k
+            di.ingest(t_logical, p, "vitals", rng.standard_normal(
+                (vitals_ch, int(vitals_hz))).astype(np.float32))
             ref = di.close_window(p, t_logical + 1.0,
                                   extra={"qid": qid})
             qid += 1
@@ -266,12 +274,14 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
             if srv.q.qsize() >= max(2, max_queue // 2):
                 break       # polite pulse: recovery measurement traffic
                 #             must not re-trigger backpressure shedding
-            if di.headroom(p) < input_len:
+            if di.headroom(p) < 1.0:
                 ring_rejected += 1
                 continue
             sig = rng.standard_normal(
                 (ECG_LEADS, input_len)).astype(np.float32)
             di.ingest(t_logical, p, "ecg", sig)
+            di.ingest(t_logical, p, "vitals", rng.standard_normal(
+                (vitals_ch, int(vitals_hz))).astype(np.float32))
             ref = di.close_window(p, t_logical + 1.0,
                                   extra={"qid": qid})
             qid += 1

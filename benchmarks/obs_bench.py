@@ -112,10 +112,10 @@ def run_overhead(n_patients: int = 64, windows_per_patient: int = 4,
     for r in range(reps):
         st = _serve_once(svc, n_patients, windows_per_patient,
                          input_len, seed + r)
-        off_ms.append(1e3 * float(np.mean(st.latencies)))
+        off_ms.append(1e3 * st.mean_latency)
         st = _serve_once(svc, n_patients, windows_per_patient,
                          input_len, seed + r, tracer=tracer)
-        on_ms.append(1e3 * float(np.mean(st.latencies)))
+        on_ms.append(1e3 * st.mean_latency)
 
     med_off = statistics.median(off_ms)
     med_on = statistics.median(on_ms)

@@ -331,6 +331,141 @@ def bench_ingest(n_patients: int = 64, reps: int = 5,
     return out
 
 
+SLOTS_TOP_KEYS = ("n_slots", "n_members", "n_buckets", "tick_reps",
+                  "n_reads", "input_len", "tick_ms",
+                  "dispatches_per_tick", "dispatches_per_query",
+                  "reads_per_sec", "read_us", "flush_per_query_ms",
+                  "read_vs_flush_ratio", "bitwise_equal")
+
+
+def check_slots_schema(out: Dict) -> None:
+    """Schema + invariant guard for ``BENCH_serving.json["slots"]``:
+    queries must be free of device dispatch entirely, and a query read
+    must cost at most a tenth of a flush-path query."""
+    for k in SLOTS_TOP_KEYS:
+        assert k in out, f"slots bench missing key {k!r}"
+    assert out["bitwise_equal"] is True, \
+        "slot engine diverged from the flush oracle"
+    assert out["dispatches_per_query"] == 0.0, \
+        "slot reads must not dispatch device work"
+    assert out["read_vs_flush_ratio"] <= 0.10, \
+        (f"slot read latency {out['read_us']:.1f}us is more than 10% "
+         f"of a flush query ({out['flush_per_query_ms']:.3f}ms)")
+
+
+def check_slots_file(path: str = BENCH_JSON) -> None:
+    """CI gate on the committed BENCH_serving.json["slots"] section."""
+    with open(path) as f:
+        data = json.load(f)
+    assert "slots" in data, "BENCH_serving.json missing 'slots'"
+    check_slots_schema(data["slots"])
+    print(f"slots schema OK ({path})")
+
+
+def bench_slots(n_slots: int = 64, tick_reps: int = 20,
+                n_reads: int = 200_000, input_len: int = 750,
+                verbose=True, write_json: bool = True) -> Dict:
+    """Slot-engine continuous serving vs the flush path on the reduced
+    zoo x ``n_slots`` occupied beds:
+
+    * ``tick_ms``             — one fused tick scoring ALL occupied
+                                slots (ring gathers + the flush path's
+                                cached bucket dispatches + one donated
+                                masked update);
+    * ``reads_per_sec``       — query cost once scores are resident:
+                                ``read()`` is a host int read of the
+                                mirror, zero H2D and zero dispatch;
+    * ``flush_per_query_ms``  — the flush path serving the same refs,
+                                for the read-vs-flush latency ratio.
+
+    The engine's scores are asserted BITWISE equal to the flush oracle
+    (same cached XLA programs, both at the ``n_slots`` pow2 pad).
+    Merged into ``BENCH_serving.json`` under ``"slots"``.
+    """
+    import jax
+    from repro.configs.ecg_zoo import ECG_LEADS, zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.aggregator import DeviceIngest, ModalitySpec
+    from repro.serving.pipeline import EnsembleService, ZooMember
+    from repro.serving.slots import SlotEngine
+
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS)],
+                      n_slots, window_seconds=1.0)
+    svc = EnsembleService(members)
+    eng = SlotEngine(svc, di)
+
+    refs = []
+    for p in range(n_slots):
+        sig = rng.standard_normal(
+            (ECG_LEADS, input_len)).astype(np.float32)
+        off = 0
+        for k in (250, 250, input_len - 500):
+            di.ingest(off / input_len, p, "ecg", sig[:, off:off + k])
+            off += k
+        ref = di.close_window(p, 1.0)
+        refs.append(ref)
+        eng.update(ref)
+
+    eng.warm()
+    eng.tick()                                     # first-tick residue
+    d0 = eng.dispatch_count
+    t0 = time.perf_counter()
+    for _ in range(tick_reps):
+        eng.tick()
+    tick_dt = time.perf_counter() - t0
+    dispatches_per_tick = (eng.dispatch_count - d0) / tick_reps
+
+    d0 = eng.dispatch_count
+    t0 = time.perf_counter()
+    for i in range(n_reads):
+        eng.read(i % n_slots)
+    read_dt = time.perf_counter() - t0
+    read_dispatches = (eng.dispatch_count - d0) / n_reads
+
+    oracle = np.asarray(svc.predict_batch(refs), np.float64)
+    svc.predict_batch(refs)                        # flush-path warm
+    t0 = time.perf_counter()
+    for _ in range(max(2, tick_reps // 4)):
+        svc.predict_batch(refs)
+    flush_dt = time.perf_counter() - t0
+    flush_per_query_ms = (flush_dt / (max(2, tick_reps // 4) * n_slots)
+                          * 1e3)
+
+    read_us = read_dt / n_reads * 1e6
+    out: Dict = {
+        "n_slots": n_slots, "n_members": len(members),
+        "n_buckets": svc.n_buckets, "tick_reps": tick_reps,
+        "n_reads": n_reads, "input_len": input_len,
+        "tick_ms": tick_dt / tick_reps * 1e3,
+        "dispatches_per_tick": dispatches_per_tick,
+        "dispatches_per_query": read_dispatches,
+        "reads_per_sec": n_reads / read_dt,
+        "read_us": read_us,
+        "flush_per_query_ms": flush_per_query_ms,
+        "read_vs_flush_ratio": (read_us * 1e-3) / flush_per_query_ms,
+        "bitwise_equal": bool(np.array_equal(
+            eng.scores(), oracle, equal_nan=True)),
+    }
+    if verbose:
+        print(f"\nslot engine bench ({n_slots} occupied slots, "
+              f"L={input_len}):")
+        print(f"  tick: {out['tick_ms']:7.2f} ms for all {n_slots} "
+              f"slots ({dispatches_per_tick:.1f} dispatches/tick)")
+        print(f"  read: {read_us:7.2f} us/query  "
+              f"{out['reads_per_sec']:10.0f} reads/s  "
+              f"{read_dispatches:.2f} dispatches/query")
+        print(f"  flush path: {flush_per_query_ms:7.3f} ms/query  "
+              f"-> read/flush ratio {out['read_vs_flush_ratio']:.4f}")
+        print(f"  bitwise vs flush oracle: {out['bitwise_equal']}")
+    if write_json:
+        _merge_bench_json({"slots": out})
+    return out
+
+
 def bench_placement_sweep(device_counts=(1, 2, 4, 8),
                           n_patients: int = 16, reps: int = 5,
                           input_len: int = 750, verbose=True,
@@ -450,6 +585,10 @@ if __name__ == "__main__":
                            write_json=False)
         check_ingest_schema(out)
         print("ingest schema OK")
+        out = bench_slots(n_slots=8, tick_reps=3, n_reads=20_000,
+                          input_len=250, write_json=False)
+        check_slots_schema(out)
+        print("slots schema OK")
     else:
         # standalone entry point for the multi-device sweep: the flag
         # must land before jax initialises (jax is imported lazily)
@@ -457,4 +596,6 @@ if __name__ == "__main__":
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
         bench_fused_serving()
         bench_ingest()
+        bench_slots()
+        check_slots_file()
         bench_placement_sweep()

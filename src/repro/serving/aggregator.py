@@ -327,20 +327,39 @@ class DeviceIngest:
         return DeviceWindowRef(ingest=self, patient=patient, ends=ends,
                                valid=valid, extra=dict(extra or {}))
 
-    def headroom(self, patient: int, modality: str = "ecg") -> int:
-        """Samples that can still be ingested before a ref closed at the
-        CURRENT mark would be overwritten in the ring (conservatively
-        assuming the ref needs a full ``want``-sample window).  The
-        ingest side's backpressure signal: at ``<= 0`` further feeding
-        will push outstanding windows past the staleness guard, so the
-        driver should reject (and count) new queries rather than let
-        them go stale-then-NaN downstream."""
-        st = self.states[modality]
-        cap = int(st.buf.shape[-1])
-        mark = int(self.mark[modality][patient])
-        fed = int(self.fed[modality][patient])
-        oldest = max(0, mark - self.want[modality])
-        return cap - (fed - oldest)
+    def headroom(self, patient: int,
+                 modality: Optional[str] = None) -> float:
+        """Slack left before a ref closed at the CURRENT mark would be
+        overwritten in a ring (conservatively assuming the ref needs a
+        full ``want``-sample window).  The ingest side's backpressure
+        signal.
+
+        With a ``modality`` name: that ring's headroom in SAMPLES (an
+        int), the per-ring view.  With ``modality=None`` (the driver
+        default): the MINIMUM across all modalities, normalized to
+        WINDOW units (samples of slack / window length) so the
+        differently-clocked rings are comparable — a 250 Hz ECG ring
+        and a 1 Hz vitals ring overrun on different clocks, and the
+        pre-fix ECG-only signal let a vitals-stale ref pass admission
+        and NaN downstream.  At ``< 1.0`` (less than one full window of
+        slack in SOME ring) further feeding will push outstanding
+        windows past a staleness guard, so the driver should reject
+        (and count) new queries rather than let them go
+        stale-then-NaN."""
+        if modality is not None:
+            st = self.states[modality]
+            cap = int(st.buf.shape[-1])
+            mark = int(self.mark[modality][patient])
+            fed = int(self.fed[modality][patient])
+            oldest = max(0, mark - self.want[modality])
+            return cap - (fed - oldest)
+        return min(self.headroom(patient, m) / self.want[m]
+                   for m in self.modalities)
+
+    def headroom_by_modality(self, patient: int) -> Dict[str, float]:
+        """Per-ring headroom breakdown in samples (the per-modality
+        view behind the min-aggregated backpressure signal)."""
+        return {m: self.headroom(patient, m) for m in self.modalities}
 
     def warm_gather(self, lens: Tuple[int, ...],
                     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8),

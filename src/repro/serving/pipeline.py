@@ -733,16 +733,39 @@ class StreamingPipeline:
     With ``tier_of`` (patient -> acuity tier) the service must be
     tier-routing (``TierRouter`` / ``control.tiers.TieredEnsemble``):
     each closed window is answered by the patient's CURRENT tier's
-    service."""
+    service.
+
+    ``engine="slots"`` (requires ``device_ingest=True``, untiered, a
+    plain fused ``EnsembleService``) switches from flush-per-window to
+    the continuous slot engine (``serving.slots.SlotEngine``): a
+    closed window UPDATES the bed's slot, and every ``tick_seconds``
+    of logical stream time one tick rescores all occupied slots —
+    records are emitted per (window, covering tick) with the slot's
+    oracle-exact score."""
 
     def __init__(self, service, n_patients: int,
                  window_seconds: float = float(CLIP_SECONDS),
                  tier_of: Optional[Callable[[int], str]] = None,
                  device_ingest: bool = False,
                  capacity_windows: float = 2.0,
-                 trace_stages: bool = False):
+                 trace_stages: bool = False,
+                 engine: str = "flush",
+                 tick_seconds: Optional[float] = None):
         mods = [ModalitySpec("ecg", ECG_HZ, ECG_LEADS),
                 ModalitySpec("vitals", VITALS_HZ, 7)]
+        if engine not in ("flush", "slots"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "slots" and not device_ingest:
+            raise ValueError('engine="slots" requires device_ingest='
+                             "True (slots ARE the device rings)")
+        if engine == "slots" and tier_of is not None:
+            raise ValueError('engine="slots" is untiered')
+        self.engine = engine
+        self.tick_seconds = (tick_seconds if tick_seconds is not None
+                             else window_seconds)
+        self.slot_engine = None
+        self._last_tick_t: Optional[float] = None
+        self._pending_close: Dict[int, float] = {}
         self.service = service
         self.tier_of = tier_of
         self.device_ingest: Optional[DeviceIngest] = None
@@ -768,6 +791,9 @@ class StreamingPipeline:
         else:
             self.aggs = [PatientAggregator(mods, window_seconds)
                          for _ in range(n_patients)]
+        if engine == "slots":
+            from repro.serving.slots import SlotEngine
+            self.slot_engine = SlotEngine(service, self.device_ingest)
         self.labs_cache: Dict[int, np.ndarray] = {}
         self.records: List[ServedQuery] = []
         self.trace_stages = trace_stages
@@ -794,13 +820,21 @@ class StreamingPipeline:
         if self.device_ingest is not None:
             self.device_ingest.ingest(t, patient, modality, samples)
             if not self.device_ingest.window_ready(patient, t):
-                return None
+                return self._maybe_tick(t, patient) \
+                    if self.engine == "slots" else None
         else:
             agg = self.aggs[patient]
             agg.ingest(t, modality, samples)
             if not agg.window_ready(t):
                 return None
         windows = self._close(t, patient)
+        if self.engine == "slots":
+            # the closed window updates the bed's slot; scoring happens
+            # at the next tick boundary of LOGICAL stream time, covering
+            # every slot that closed a window since the last tick
+            self.slot_engine.update(windows)
+            self._pending_close[patient] = t
+            return self._maybe_tick(t, patient)
         t0 = time.perf_counter()
         stages: Optional[Dict[str, float]] = None
         if self.trace_stages:
@@ -820,6 +854,43 @@ class StreamingPipeline:
                           score=score, stages=stages)
         self.records.append(rec)
         return rec
+
+    def _maybe_tick(self, t: float,
+                    patient: Optional[int] = None
+                    ) -> Optional[ServedQuery]:
+        """Fire a slot tick when a tick interval of logical time has
+        passed and windows are pending; emit one ``ServedQuery`` per
+        pending closed window the tick covered.  Returns ``patient``'s
+        record when this tick scored it."""
+        if self._last_tick_t is None:
+            self._last_tick_t = t
+        if t - self._last_tick_t < self.tick_seconds \
+                or not self._pending_close:
+            return None
+        return self.tick_now(t, patient)
+
+    def tick_now(self, t: float,
+                 patient: Optional[int] = None) -> Optional[ServedQuery]:
+        """Force a slot tick at logical time ``t`` (drain helper: score
+        whatever closed windows are still pending)."""
+        eng = self.slot_engine
+        if eng is None:
+            raise ValueError("tick_now needs engine='slots'")
+        t0 = time.perf_counter()
+        report = eng.tick()
+        wall = time.perf_counter() - t0
+        self._last_tick_t = t
+        out = None
+        for s in map(int, report.scored):
+            tw = self._pending_close.pop(s, None)
+            if tw is None:
+                continue        # rescored slot with no new window
+            rec = ServedQuery(patient=s, t_window=tw, t_done=t + wall,
+                              score=eng.read(s))
+            self.records.append(rec)
+            if s == patient:
+                out = rec
+        return out
 
     def latencies(self) -> np.ndarray:
         return np.asarray([r.latency for r in self.records])

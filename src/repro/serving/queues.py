@@ -149,6 +149,18 @@ class MicroBatcher:
         with self._lock:
             return self._q[0][0] if self._q else None
 
+    def stats_snapshot(self) -> MicroBatchStats:
+        """Consistent copy of the flush stats, taken under the batcher
+        lock.  ``pop_batch`` mutates several stats fields in sequence;
+        reading the live ``self.stats`` object field-by-field from
+        another thread can interleave with that sequence and return a
+        torn aggregate (``n_items`` from after a flush, ``n_flushes``
+        from before it).  Readers that combine fields — the keyed
+        aggregate below, the Prometheus exporter — must go through this
+        snapshot."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
 
 # KeyedMicroBatcher.ready()'s "no lane is due" result: a sentinel, NOT
 # None — None is a legitimate lane key (the server's fallback when a
@@ -214,21 +226,30 @@ class KeyedMicroBatcher:
 
     @property
     def stats(self) -> MicroBatchStats:
-        """Aggregate over lanes (the server's reporting surface)."""
+        """Aggregate over lanes (the server's reporting surface).  Each
+        lane contributes an atomic ``stats_snapshot()`` — summing the
+        live per-lane objects field-by-field raced concurrent
+        ``pop_batch`` updates and could publish a torn aggregate (e.g.
+        ``n_flushes`` from after a flush whose ``n_items`` was read
+        before it)."""
         with self._lock:
             lanes = list(self._lanes.values())
         agg = MicroBatchStats()
         for l in lanes:
-            agg.n_items += l.stats.n_items
-            agg.n_flushes += l.stats.n_flushes
+            s = l.stats_snapshot()
+            agg.n_items += s.n_items
+            agg.n_flushes += s.n_flushes
             agg.max_batch_seen = max(agg.max_batch_seen,
-                                     l.stats.max_batch_seen)
-            agg.total_hold += l.stats.total_hold
+                                     s.max_batch_seen)
+            agg.total_hold += s.total_hold
         return agg
 
     def lane_stats(self) -> "Dict[Any, MicroBatchStats]":
+        """Per-lane stats SNAPSHOTS (each internally consistent), not
+        the live mutable objects."""
         with self._lock:
-            return {k: l.stats for k, l in self._lanes.items()}
+            lanes = list(self._lanes.items())
+        return {k: l.stats_snapshot() for k, l in lanes}
 
 
 class ShedQueue:

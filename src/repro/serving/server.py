@@ -26,6 +26,16 @@ served by exactly its tier's (selector, placement) service.  The
 telemetry tap always carries the patient id, so per-tier SLO slices
 (``control.telemetry.TieredTelemetry``) come for free.
 
+Continuous slot serving: ``engine="slots"`` (with a
+``serving.slots.SlotEngine``) subsumes the micro-batcher on the hot
+path entirely — ``submit`` folds each closed window into the bed's
+persistent slot, a dedicated ticker thread scores ALL occupied slots
+every tick with one fused step, and workers retire each query with a
+version-gated host int read (zero dispatches, zero H2D per query).
+Queue bounds, shedding, stats, telemetry taps and span tracing are
+identical to the flush engine; staleness becomes a tick-age guard
+(``slot_wait_timeout``) instead of the flush deadline.
+
 Fault tolerance:
 
 * the ingest queue is a ``ShedQueue`` bounding UNFINISHED work (queued
@@ -59,6 +69,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import sketch as _sketch
 from repro.obs import spans as _spans
 from repro.serving.queues import (NO_LANE, KeyedMicroBatcher, MicroBatcher,
                                   ShedQueue)
@@ -71,10 +82,12 @@ class Task:
     old ``(patient, windows, t_window)`` tuple so the span stamps the
     tracer needs ride the object itself instead of a side table.  All
     fields except the first three are stamped lazily on the trace
-    path; ``__slots__`` keeps the per-query footprint tuple-sized."""
+    path; ``__slots__`` keeps the per-query footprint tuple-sized.
+    ``version`` is the slot engine's close version under
+    ``engine="slots"`` (which tick must land before the read)."""
 
     __slots__ = ("patient", "windows", "t_window", "tier",
-                 "t_dequeue", "t_flush", "batch_n", "stages")
+                 "t_dequeue", "t_flush", "batch_n", "stages", "version")
 
     def __init__(self, patient: int, windows: Dict, t_window: float,
                  tier: object = None):
@@ -86,14 +99,25 @@ class Task:
         self.t_flush = t_window
         self.batch_n = 1
         self.stages: Optional[Dict[str, float]] = None
+        self.version = 0
 
 
 class ServerStats:
     """Thread-safe serving counters.  Worker threads ``record()``
     retired queries concurrently with readers: every mutation holds the
-    internal lock, and ``p()``/``snapshot()`` copy the latency list
-    under it, so percentile reads are snapshot-consistent instead of
-    racing ongoing appends.
+    internal lock, and ``p()``/``snapshot()`` read the latency
+    histogram under it, so percentile reads are snapshot-consistent
+    instead of racing ongoing updates.
+
+    Latencies live in the obs plane's log-spaced histogram
+    (``obs.sketch``: fixed ``N_BINS`` bins, growth 1.12), NOT a list:
+    an hours-long soak retires millions of queries, and the pre-fix
+    unbounded ``latencies`` list grew O(n) memory while ``p()`` paid an
+    O(n log n) copy-and-sort per read.  Now memory is O(1), ``record``
+    is O(log bins) and ``p()`` is O(bins), with quantiles within the
+    sketch's ~5.8% relative-error bound (``sketch.REL_ERR_BOUND``).
+    The ``served``/``failed``/``shed``/``stalls`` counters and the
+    latency SUM stay exact — only quantiles are approximate.
 
     ``served`` counts every retired query including failures; ``failed``
     is the NaN-scored subset (poisoned / stale / stall-killed), so
@@ -110,13 +134,18 @@ class ServerStats:
         self.failed = 0
         self.stalls = 0
         self.rejected: Dict[object, int] = {}
-        self.latencies: List[float] = []
+        self._lat_counts = np.zeros(_sketch.N_BINS, np.int64)
+        self._lat_sum = 0.0
+        self._lat_max = 0.0
 
     def record(self, latency: float, violated: bool,
                failed: bool = False) -> None:
         with self._lock:
             self.served += 1
-            self.latencies.append(latency)
+            self._lat_counts[_sketch.bin_index(latency)] += 1
+            self._lat_sum += latency
+            if latency > self._lat_max:
+                self._lat_max = latency
             if violated:
                 self.slo_violations += 1
             if failed:
@@ -136,13 +165,35 @@ class ServerStats:
         with self._lock:
             return self.slo_violations / self.served if self.served else 0.0
 
-    def snapshot(self) -> List[float]:
+    @property
+    def n_latencies(self) -> int:
+        """Exact number of recorded latency samples (== ``served``)."""
         with self._lock:
-            return list(self.latencies)
+            return int(self._lat_counts.sum())
+
+    @property
+    def mean_latency(self) -> float:
+        """Exact mean served latency (the sum is kept exactly; only
+        quantiles go through the histogram)."""
+        with self._lock:
+            n = int(self._lat_counts.sum())
+            return self._lat_sum / n if n else 0.0
+
+    @property
+    def max_latency(self) -> float:
+        with self._lock:
+            return self._lat_max
+
+    def snapshot(self) -> np.ndarray:
+        """Consistent copy of the latency histogram bin counts
+        (``obs.sketch`` bin layout — mergeable across servers by
+        elementwise sum)."""
+        with self._lock:
+            return self._lat_counts.copy()
 
     def p(self, pct: float) -> float:
-        lat = self.snapshot()
-        return float(np.percentile(lat, pct)) if lat else 0.0
+        counts = self.snapshot()
+        return _sketch.quantile_from_counts(counts, pct)
 
 
 class EnsembleServer:
@@ -166,8 +217,40 @@ class EnsembleServer:
                  tier_priority: Optional[Dict[object, float]] = None,
                  deadline_seconds: Optional[float] = None,
                  watchdog_interval: float = 0.02,
-                 tracer: Optional["_spans.SpanRecorder"] = None):
-        assert handler is not None or batch_handler is not None
+                 tracer: Optional["_spans.SpanRecorder"] = None,
+                 engine: str = "flush",
+                 slot_engine=None,
+                 tick_interval: float = 0.02,
+                 slot_wait_timeout: Optional[float] = None):
+        if engine not in ("flush", "slots"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "slots":
+            # continuous slot serving: no per-query handler at all — a
+            # dedicated ticker scores every occupied slot each tick and
+            # workers just version-gate a host read per query, so the
+            # micro-batcher is subsumed entirely on the hot path
+            if slot_engine is None:
+                raise ValueError('engine="slots" needs a slot_engine '
+                                 "(serving.slots.SlotEngine)")
+            if handler is not None or batch_handler is not None:
+                raise ValueError('engine="slots" replaces the handlers; '
+                                 "pass neither")
+            if tier_of is not None or tier_priority is not None:
+                raise ValueError('engine="slots" is untiered (one slot '
+                                 "plane per census); drop tier_of")
+        else:
+            assert handler is not None or batch_handler is not None
+            if slot_engine is not None:
+                raise ValueError('slot_engine needs engine="slots"')
+        self.engine = engine
+        self.slot_engine = slot_engine
+        self._slot_wait = (slot_wait_timeout
+                           if slot_wait_timeout is not None
+                           else max(1.0, 10.0 * tick_interval))
+        self.ticker = None
+        if engine == "slots":
+            from repro.serving.slots import SlotTicker
+            self.ticker = SlotTicker(slot_engine, interval=tick_interval)
         self.handler = handler
         self.batch_handler = batch_handler
         self.slo = slo_seconds
@@ -196,8 +279,17 @@ class EnsembleServer:
         self.deadline = deadline_seconds
         self._wd_interval = watchdog_interval
         self._wd_lock = threading.Lock()
-        self._inflight: Dict[int, tuple] = {}    # ident -> (t0, tasks)
-        self._abandoned: set = set()             # idents killed by watchdog
+        # watchdog bookkeeping is keyed by a per-worker EPOCH TOKEN
+        # (the monotonic spawn counter, stamped into a thread-local at
+        # worker start), NOT ``threading.get_ident()``: the OS reuses
+        # idents after a thread exits, so a replacement worker could
+        # inherit its stalled predecessor's ``_abandoned`` entry and
+        # silently discard a healthy co-batch's scores — breaking the
+        # "every query retires exactly once" contract.  Epoch tokens
+        # are never reused within a server's lifetime.
+        self._inflight: Dict[int, tuple] = {}    # token -> (t0, tasks)
+        self._abandoned: set = set()             # tokens killed by watchdog
+        self._worker_token = threading.local()
         self._stop = threading.Event()
         self._results: "queue.Queue" = queue.Queue()
         self._spawned = 0
@@ -210,14 +302,23 @@ class EnsembleServer:
 
     def _make_worker(self) -> threading.Thread:
         self._spawned += 1
-        return threading.Thread(target=self._run, daemon=True,
+        return threading.Thread(target=self._run, args=(self._spawned,),
+                                daemon=True,
                                 name=f"repro-worker-{self._spawned}")
+
+    def _token(self) -> int:
+        """The calling worker's epoch token (its spawn ordinal).  A
+        non-worker caller (tests poking ``heartbeat`` from the main
+        thread) gets a sentinel that is never in the watchdog maps."""
+        return getattr(self._worker_token, "token", -1)
 
     def start(self) -> "EnsembleServer":
         for w in self._workers:
             w.start()
         if self._watchdog is not None:
             self._watchdog.start()
+        if self.ticker is not None:
+            self.ticker.start()
         return self
 
     def _tier_and_priority(self, patient: int):
@@ -242,6 +343,11 @@ class EnsembleServer:
         t_window = t_window if t_window is not None else time.monotonic()
         tier, prio = self._tier_and_priority(patient)
         task = Task(patient, windows, t_window, tier)
+        if self.engine == "slots":
+            # fold the closed window into the bed's slot BEFORE
+            # admission control: even if the read request is shed, the
+            # slot state must stay fresh (monitoring never regresses)
+            task.version = self.slot_engine.update(windows)
         try:
             if self.tier_priority is not None:
                 ok, victim = self.q.put_evicting(task, priority=prio,
@@ -300,8 +406,8 @@ class EnsembleServer:
         if self.deadline is None:
             return
         with self._wd_lock:
-            self._inflight[threading.get_ident()] = (time.monotonic(),
-                                                     list(tasks))
+            self._inflight[self._token()] = (time.monotonic(),
+                                             list(tasks))
 
     def heartbeat(self) -> bool:
         """Refresh the calling worker's in-flight deadline.  For
@@ -314,7 +420,7 @@ class EnsembleServer:
         scores will be discarded; it may stop retrying)."""
         if self.deadline is None:
             return True
-        me = threading.get_ident()
+        me = self._token()
         with self._wd_lock:
             if me in self._inflight:
                 _, tasks = self._inflight[me]
@@ -329,7 +435,7 @@ class EnsembleServer:
         the worker must exit, so each query retires exactly once."""
         if self.deadline is None:
             return True
-        me = threading.get_ident()
+        me = self._token()
         with self._wd_lock:
             self._inflight.pop(me, None)
             if me in self._abandoned:
@@ -346,10 +452,10 @@ class EnsembleServer:
             now = time.monotonic()
             overdue = []
             with self._wd_lock:
-                for ident, (t0, tasks) in list(self._inflight.items()):
+                for token, (t0, tasks) in list(self._inflight.items()):
                     if now - t0 > self.deadline:
-                        del self._inflight[ident]
-                        self._abandoned.add(ident)
+                        del self._inflight[token]
+                        self._abandoned.add(token)
                         overdue.append(tasks)
             for tasks in overdue:
                 self.stats.record_stall()
@@ -442,7 +548,40 @@ class EnsembleServer:
                 return                  # watchdog replaced this worker
             self._retire(tasks, scores)
 
-    def _run(self) -> None:
+    def _run_slots(self) -> None:
+        """Slot-engine worker: no handler, no batcher, no dispatch —
+        wait for the tick covering the task's close version, then one
+        host int read.  The wait is bounded by ``slot_wait_timeout``
+        (default 10 tick intervals): a stopped ticker or a slot gone
+        stale retires the query NaN instead of blocking forever — the
+        tick-age guard in server form."""
+        eng = self.slot_engine
+        while not self._stop.is_set():
+            try:
+                task = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            task.t_dequeue = time.monotonic()
+            ok = eng.wait_scored(task.patient, task.version,
+                                 timeout=self._slot_wait)
+            task.t_flush = time.monotonic()
+            if ok:
+                try:
+                    score = eng.read(task.patient)
+                except KeyError:          # discharged after scoring
+                    score = float("nan")
+            else:
+                score = float("nan")
+            self._retire([task], [score],
+                         cause=None if ok else "stale")
+
+    def _run(self, token: int = -1) -> None:
+        # stamp this worker's epoch token before any watchdog-visible
+        # work; everything downstream (_begin/_end_inflight, heartbeat)
+        # reads it from the thread-local
+        self._worker_token.token = token
+        if self.engine == "slots":
+            return self._run_slots()
         if self.batch_handler is not None:
             return self._run_batched()
         tracing = self.tracer is not None
@@ -508,6 +647,8 @@ class EnsembleServer:
         for t in threads:
             t.join(timeout=join_timeout)
         self.leaked = [t.name for t in threads if t.is_alive()]
+        if self.ticker is not None and not self.ticker.stop(join_timeout):
+            self.leaked.append(self.ticker.name)
         if self.leaked:
             log.warning("server stop(): threads still alive: %s",
                         self.leaked)

@@ -1,0 +1,581 @@
+"""Slot-based continuous serving engine (the JetStream/MaxText slot
+idiom applied to ICU ensemble serving).
+
+The flush path (``pipeline.EnsembleService.predict_batch``) is
+query-oriented: every micro-batch re-marshals refs, pads, dispatches
+and gathers, so dispatches/query bottoms out at ``n_buckets /
+max_batch`` (~0.25 on the reduced zoo).  Continuous monitoring inverts
+that: every bed streams *all the time*, so the score should be an
+always-fresh per-patient STATE that queries merely read.
+
+``SlotEngine`` keeps exactly that state:
+
+* each bed owns a **slot** — its window state already lives in the
+  ``DeviceIngest`` ring buffers (``[n_patients, channels, capacity]``
+  per modality, updated in place by device ingest); the engine adds
+  the host-side slot bookkeeping (occupancy, last-closed-window ints,
+  close/score versions) plus a persistent on-device member-score
+  matrix ``[M, n_slots]`` per device group;
+* ``tick()`` scores **all occupied slots at once**: one fused ring
+  gather per distinct window length (``gather_windows`` — the same
+  program the flush uses), the *same cached stacked bucket dispatches*
+  as the flush path (``pipeline._make_bucket_fn`` jit objects, so the
+  tick shares the flush's compile cache), and ONE **donated** jitted
+  update step per device group that applies the occupancy mask to the
+  member-score state in place and writes the ``[n_slots]`` combined
+  score vector that stays on device (``device_scores``);
+* a query becomes "read slot k's latest score" — host int indexing
+  into the engine's mirror, **zero H2D and zero dispatches per
+  query**.  The tick's ``n_buckets + 1`` dispatches amortize over
+  every occupied slot, so dispatches/query ~ ``n_buckets / n_slots``
+  (~0.06 at 64 beds, → 0 at the ROADMAP's thousands).
+
+Bitwise oracle contract
+-----------------------
+Because the tick reuses the flush's OWN bucket jit objects and the
+masked update merely *selects* freshly computed columns, a slot's
+score is bitwise-identical to ``predict_batch`` over the same refs
+(the flush path stays the oracle, exactly like ``marshal="legacy"``
+is the oracle for the packed marshal).  The host ``read()`` surface
+replicates ``EnsembleService._combine``'s float64 mean + CPU-side
+vitals/labs models verbatim from a per-tick readback of the member
+score matrix, so even the combined score matches the oracle bit for
+bit.  (The on-device ``device_scores`` vector is the float32 ECG-zoo
+mean — the mesh-facing artifact — and is NOT the oracle surface.)
+One caveat inherited from XLA: a flush of exactly ONE window compiles
+a different (batch-1-specialized) program, so the oracle comparison
+holds for flushes of two or more windows.
+
+Staleness is a tick-age guard: a slot whose ring data was overwritten
+before the tick could gather it (the same two-host-int check the
+flush uses) is skipped — its mirror keeps the last good score and its
+score version stops advancing, so version-gated readers
+(``wait_scored``) time out to NaN instead of serving wrong-window
+data.
+
+``SlotTicker`` drives ``tick()`` from a daemon thread at a writable
+interval, and ``TickLadder`` exposes that interval as a degradation
+ladder with the same ``shed``/``climb``/``swap_to`` protocol as
+``control.swap.SelectorLadder`` — tick RATE joins ensemble
+composition and placement as a controller-actuated knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import threading
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.aggregator import (DeviceIngest, DeviceWindowRef,
+                                      gather_windows, pow2_rung)
+
+log = logging.getLogger(__name__)
+
+# the CPU backend cannot donate buffers (jax copies instead, which is
+# semantically identical); the once-per-compile warning would otherwise
+# fire on every engine's first tick
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _masked_update(prev: jax.Array, cands: Tuple[jax.Array, ...],
+                   occ: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The donated slot-state step: merge this tick's freshly scored
+    member columns (``cands``, one ``[m_i, S]`` block per bucket in
+    group order) into the persistent ``[M_g, S]`` member-score state
+    behind the occupancy mask, in place (``prev`` is donated), and
+    emit the group's ``[S]`` combined score vector.  ``where`` only
+    SELECTS columns, so a scored slot's state is bitwise the bucket
+    dispatch's output."""
+    new = jnp.where(occ[None, :], jnp.concatenate(cands, axis=0), prev)
+    return new, jnp.mean(new, axis=0)
+
+
+@jax.jit
+def _fleet_mean(mats: Tuple[jax.Array, ...]) -> jax.Array:
+    """Cross-group combine for sharded plans: the [S] member mean over
+    every device group's score matrix (brought to one device first)."""
+    return jnp.mean(jnp.concatenate(mats, axis=0), axis=0)
+
+
+@dataclasses.dataclass
+class _Group:
+    """Per-device slice of the tick: the bucket shards pinned to one
+    device plus that device's persistent member-score state."""
+    device: object                  # jax.Device or None (default)
+    buckets: List                   # pipeline._Bucket shards, plan order
+    rows: np.ndarray                # global member index per state row
+    state: jax.Array                # [M_g, Spad] float32, donated per tick
+
+
+@dataclasses.dataclass
+class TickReport:
+    """What one ``tick()`` did (the bench/telemetry surface)."""
+    tick: int                       # tick ordinal after this tick
+    n_scored: int                   # occupied slots scored this tick
+    n_stale: int                    # occupied slots skipped (ring overrun)
+    seconds: float                  # wall clock of the whole tick
+    scored: np.ndarray              # slot ids scored this tick
+
+
+class SlotEngine:
+    """Persistent patient-slot scoring over a ``DeviceIngest`` census.
+
+    ``service`` must be a fused, packed-marshal ``EnsembleService``
+    (optionally placement-sharded); ``ingest`` the census's
+    ``DeviceIngest`` (slot k == patient k — a bed owns its ring row).
+
+    Host API (all thread-safe):
+
+    * ``admit(slot)`` / ``discharge(slot)`` — slot insert / free;
+    * ``update(ref)`` — record a closed window for its slot (admits on
+      first window), returns the slot's new close VERSION;
+    * ``tick()`` — score all occupied slots once (see module doc);
+    * ``read(slot)`` — the slot's latest combined score, host int
+      indexing only (NaN before the first scoring or past the tick-age
+      guard); ``wait_scored(slot, version)`` blocks until the tick
+      covering that close version lands.
+    """
+
+    def __init__(self, service, ingest: DeviceIngest):
+        if not getattr(service, "fused", False):
+            raise ValueError("SlotEngine needs a fused EnsembleService")
+        if getattr(service, "marshal", "packed") != "packed":
+            raise ValueError("SlotEngine needs the packed marshal (the "
+                             "tick gathers windows on device)")
+        if not service.members:
+            raise ValueError("SlotEngine needs at least one zoo member")
+        if "ecg" not in ingest.states:
+            raise ValueError("SlotEngine needs an 'ecg' ingest ring")
+        self.service = service
+        self.ingest = ingest
+        self.n_slots = ingest.n_patients
+        self._Spad = pow2_rung(self.n_slots)
+        self._lens = tuple(sorted({b.spec.input_len
+                                   for b in service._buckets}))
+        # device groups in bucket-plan order (one per shard device)
+        groups: Dict[object, _Group] = {}
+        for b in service._buckets:
+            g = groups.get(b.device)
+            if g is None:
+                g = _Group(device=b.device, buckets=[],
+                           rows=np.zeros(0, np.int64), state=None)
+                groups[b.device] = g
+            g.buckets.append(b)
+        for g in groups.values():
+            g.rows = np.asarray([i for b in g.buckets for i in b.idx])
+            state = jnp.zeros((len(g.rows), self._Spad), jnp.float32)
+            g.state = (jax.device_put(state, g.device)
+                       if g.device is not None else state)
+        self.groups: List[_Group] = list(groups.values())
+        # [Spad] f32 combined (zoo-mean) score vector, stays on device
+        self.device_scores: Optional[jax.Array] = None
+        self._pj = jnp.asarray(
+            np.pad(np.arange(self.n_slots, dtype=np.int32),
+                   (0, self._Spad - self.n_slots)))
+
+        # ---- host slot state (all guarded by _lock) ----
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.occupied = np.zeros(self.n_slots, bool)
+        self.has_window = np.zeros(self.n_slots, bool)
+        self._ends = {m: np.zeros(self.n_slots, np.int64)
+                      for m in ingest.states}
+        self._valid = {m: np.zeros(self.n_slots, np.int64)
+                       for m in ingest.states}
+        self._extra: List[Dict] = [{} for _ in range(self.n_slots)]
+        self._close_version = np.zeros(self.n_slots, np.int64)
+        self.scored_version = np.full(self.n_slots, -1, np.int64)
+        self.last_scored_tick = np.full(self.n_slots, -1, np.int64)
+        self._admit_epoch = np.zeros(self.n_slots, np.int64)
+        self.mirror = np.full(self.n_slots, np.nan)   # float64 oracle
+        self.tick_count = 0
+        # counters (bench surface)
+        self.dispatch_count = 0      # stacked bucket dispatches by ticks
+        self.n_admits = 0
+        self.n_discharges = 0
+        self.n_stale_total = 0
+        self.tick_seconds = 0.0
+
+    # ------------------------------------------------------ slot admin
+    def admit(self, slot: int) -> None:
+        """Insert a bed into its slot (idempotent).  The slot serves
+        NaN until its first window is closed and ticked."""
+        with self._lock:
+            if self.occupied[slot]:
+                return
+            self._admit_locked(slot)
+
+    def _admit_locked(self, slot: int) -> None:
+        self.occupied[slot] = True
+        self.has_window[slot] = False
+        self.mirror[slot] = np.nan
+        self.scored_version[slot] = -1
+        self.last_scored_tick[slot] = -1
+        self._admit_epoch[slot] += 1
+        self._extra[slot] = {}
+        self.n_admits += 1
+
+    def discharge(self, slot: int) -> None:
+        """Free the bed's slot.  Its mirror score is cleared and any
+        reader still waiting on it wakes to NaN; the device-side state
+        column is simply masked out of future ticks until re-admission
+        closes a fresh window."""
+        with self._lock:
+            if not self.occupied[slot]:
+                raise KeyError(f"slot {slot} is not occupied")
+            self.occupied[slot] = False
+            self.has_window[slot] = False
+            self.mirror[slot] = np.nan
+            self.scored_version[slot] = -1
+            self._extra[slot] = {}
+            self.n_discharges += 1
+            self._cv.notify_all()
+
+    def update(self, ref: DeviceWindowRef) -> int:
+        """Record a closed observation window for its slot (admitting
+        the bed on its first window) and return the slot's new close
+        version — ``wait_scored(slot, version)`` then blocks until the
+        tick that covers this window has landed.  Only the ref's host
+        integers are touched; the samples stay in the rings."""
+        if ref.ingest is not self.ingest:
+            raise ValueError("ref belongs to a different DeviceIngest")
+        s = ref.patient
+        with self._lock:
+            if not self.occupied[s]:
+                self._admit_locked(s)
+            for m in ref.ends:
+                self._ends[m][s] = ref.ends[m]
+                self._valid[m][s] = ref.valid[m]
+            self._extra[s] = dict(ref.extra)
+            self.has_window[s] = True
+            self._close_version[s] += 1
+            return int(self._close_version[s])
+
+    # ------------------------------------------------------------ tick
+    def _stale_mask(self, occ: np.ndarray, ends: Dict[str, np.ndarray],
+                    valid: Dict[str, np.ndarray]) -> np.ndarray:
+        """Slots whose last-closed window has been overwritten in a
+        ring the tick will read — the flush path's staleness guard,
+        vectorized over slots.  Checked for the ECG ring always and
+        the vitals ring iff the tick's side-model readback uses it."""
+        need = {"ecg": max(self._lens)}
+        if self.service.vitals_model is not None \
+                and "vitals" in self.ingest.states:
+            need["vitals"] = self.ingest.want["vitals"]
+        stale = np.zeros(self.n_slots, bool)
+        for m, l_need in need.items():
+            cap = int(self.ingest.states[m].buf.shape[-1])
+            fed = self.ingest.fed[m][:self.n_slots]
+            oldest = ends[m] - np.minimum(valid[m], l_need)
+            stale |= occ & ((fed - oldest) > cap)
+        return stale
+
+    def _occ_device(self, mask: np.ndarray) -> Dict[object, jax.Array]:
+        occ = jnp.asarray(np.pad(mask, (0, self._Spad - self.n_slots)))
+        out = {}
+        for g in self.groups:
+            out[g.device] = (jax.device_put(occ, g.device)
+                             if g.device is not None else occ)
+        return out
+
+    def tick(self) -> TickReport:
+        """Score every occupied, non-stale slot once: fused ring
+        gathers + the flush path's cached stacked bucket dispatches +
+        one donated masked-update step per device group, then refresh
+        the host mirror with the oracle-exact combined scores."""
+        t0 = time.perf_counter()
+        svc = self.service
+        with self._lock:
+            occ = self.occupied & self.has_window
+            ends = {m: a.copy() for m, a in self._ends.items()}
+            valid = {m: a.copy() for m, a in self._valid.items()}
+            versions = self._close_version.copy()
+            epochs = self._admit_epoch.copy()
+            extras = list(self._extra)
+        stale = self._stale_mask(occ, ends, valid)
+        mask = occ & ~stale
+        scored = np.flatnonzero(mask)
+        if not len(scored):
+            with self._lock:
+                self.tick_count += 1
+                self.n_stale_total += int(stale.sum())
+                self.tick_seconds += time.perf_counter() - t0
+                self._cv.notify_all()
+                return TickReport(self.tick_count, 0, int(stale.sum()),
+                                  time.perf_counter() - t0, scored)
+
+        # one fused gather per distinct window length, over ALL slots
+        # (masked-out columns carry garbage and are dropped on device)
+        st = self.ingest.states["ecg"]
+        cap = st.buf.shape[-1]
+        pad = self._Spad - self.n_slots
+        ej = jnp.asarray(np.pad((ends["ecg"] % cap).astype(np.int32),
+                                (0, pad)))
+        vj = jnp.asarray(np.pad(
+            np.where(mask, valid["ecg"], 0).astype(np.int32), (0, pad)))
+        packs = {L: gather_windows(st.buf, self._pj, ej, vj, L)
+                 for L in self._lens}
+        dev_wins, _ = svc._ship_packs(packs)    # D2D for remote shards
+
+        guard = svc.dispatch_guard
+        occ_dev = self._occ_device(mask)
+        n_disp = 0
+        combined = None
+        for g in self.groups:
+            cands = []
+            for b in g.buckets:
+                if guard is not None:
+                    guard(b.device)
+                cands.append(b.fn(
+                    b.stacked, dev_wins[(b.spec.input_len, b.device)]))
+            n_disp += len(g.buckets)
+            g.state, combined = _masked_update(
+                g.state, tuple(cands), occ_dev[g.device])
+        if len(self.groups) == 1:
+            self.device_scores = combined
+        else:
+            anchor = self.groups[0].device
+            self.device_scores = _fleet_mean(tuple(
+                jax.device_put(g.state, anchor) for g in self.groups))
+
+        # host mirror: exact _combine numerics (float64 mean over the
+        # member column + CPU-side vitals/labs models) from one small
+        # per-tick readback — this sync point plays the flush's gather
+        score_mat = np.zeros((len(svc.members), self._Spad))
+        for g in self.groups:
+            score_mat[g.rows] = np.asarray(jax.block_until_ready(g.state))
+        vit_rows = None
+        if svc.vitals_model is not None \
+                and "vitals" in self.ingest.states:
+            vst = self.ingest.states["vitals"]
+            vcap = vst.buf.shape[-1]
+            vej = jnp.asarray(np.pad(
+                (ends["vitals"] % vcap).astype(np.int32), (0, pad)))
+            vvj = jnp.asarray(np.pad(
+                np.where(mask, valid["vitals"], 0).astype(np.int32),
+                (0, pad)))
+            vit_rows = np.asarray(gather_windows(
+                vst.buf, self._pj, vej, vvj,
+                self.ingest.want["vitals"]))
+        fresh: Dict[int, float] = {}
+        for s in scored:
+            fresh[int(s)] = self._host_combine(
+                score_mat[:, s], extras[s],
+                vit_rows[s] if vit_rows is not None else None)
+
+        wall = time.perf_counter() - t0
+        with self._lock:
+            self.tick_count += 1
+            for s, sc in fresh.items():
+                # a slot discharged (or churned to a new occupant) while
+                # the tick was in flight must not be stamped with the
+                # old occupant's score
+                if not self.occupied[s] \
+                        or self._admit_epoch[s] != epochs[s]:
+                    continue
+                self.mirror[s] = sc
+                self.scored_version[s] = versions[s]
+                self.last_scored_tick[s] = self.tick_count
+            self.dispatch_count += n_disp
+            self.n_stale_total += int(stale.sum())
+            self.tick_seconds += wall
+            self._cv.notify_all()
+            return TickReport(self.tick_count, len(scored),
+                              int(stale.sum()), wall, scored)
+
+    def _host_combine(self, score_col: np.ndarray, extra: Dict,
+                      vit_row: Optional[np.ndarray]) -> float:
+        """``EnsembleService._combine`` for one slot, verbatim: python
+        list of float64 member scores, CPU-side models appended in the
+        same order, ``np.mean`` over the list."""
+        svc = self.service
+        scores = list(score_col) if len(svc.members) else []
+        if svc.vitals_model is not None:
+            vit = vit_row if vit_row is not None else extra.get("vitals")
+            if vit is not None:
+                scores.append(float(
+                    svc.vitals_model.predict_proba(vit[None])[0]))
+        if svc.labs_model is not None:
+            labs = extra.get("labs")
+            if labs is not None:
+                scores.append(float(
+                    svc.labs_model.predict_proba(labs[None])[0]))
+        return float(np.mean(scores)) if scores else 0.5
+
+    # ------------------------------------------------------------ reads
+    def read(self, slot: int,
+             max_age_ticks: Optional[int] = None) -> float:
+        """The slot's latest combined score — host int indexing, no
+        device work at all.  NaN before the slot's first scoring, and
+        NaN past the tick-age guard: ``max_age_ticks`` bounds how many
+        ticks ago the score may have landed (a stale ring or a stopped
+        ticker stops a slot's score version from advancing, and this
+        guard keeps such a slot from serving an old score forever)."""
+        with self._lock:
+            if not self.occupied[slot]:
+                raise KeyError(f"slot {slot} is not occupied")
+            if self.scored_version[slot] < 0:
+                return float("nan")
+            if max_age_ticks is not None and (
+                    self.tick_count - self.last_scored_tick[slot]
+                    > max_age_ticks):
+                return float("nan")
+            return float(self.mirror[slot])
+
+    def wait_scored(self, slot: int, version: int,
+                    timeout: float = 1.0) -> bool:
+        """Block until the tick covering close ``version`` of ``slot``
+        has landed (True), or the slot was discharged / the timeout
+        expired (False — the caller should serve NaN)."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if not self.occupied[slot]:
+                    return False
+                if self.scored_version[slot] >= version:
+                    return True
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(min(remaining, 0.05))
+
+    def scores(self) -> np.ndarray:
+        """Snapshot of the host mirror: ``[n_slots]`` float64, NaN for
+        unoccupied / not-yet-scored slots."""
+        with self._lock:
+            return np.where(self.occupied, self.mirror, np.nan)
+
+    # ----------------------------------------------------------- warmup
+    def warm(self) -> None:
+        """Pre-compile everything a tick touches (ring gathers and
+        bucket dispatches at the slot batch size) so the first tick
+        never pays XLA compile on the serving path."""
+        self.ingest.warm_gather(self._lens, batch_sizes=(self._Spad,))
+        if self.service.vitals_model is not None \
+                and "vitals" in self.ingest.states:
+            self.ingest.warm_gather(
+                (self.ingest.want["vitals"],),
+                batch_sizes=(self._Spad,), modality="vitals")
+        self.service.warmup(batch_sizes=(self._Spad,))
+
+
+class SlotTicker:
+    """Daemon-thread tick driver: calls ``engine.tick()`` every
+    ``interval`` seconds.  ``interval`` is a plain writable float read
+    fresh each cycle — ``TickLadder`` actuates it live, no restart."""
+
+    def __init__(self, engine: SlotEngine, interval: float = 0.05,
+                 name: str = "repro-ticker"):
+        self.engine = engine
+        self.interval = float(interval)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+
+    def start(self) -> "SlotTicker":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.engine.tick()
+            except Exception:
+                log.exception("slot tick failed; ticker continues")
+
+    def stop(self, join_timeout: float = 2.0) -> bool:
+        """Stop and join; returns True when the thread exited."""
+        self._stop.set()
+        self._thread.join(timeout=join_timeout)
+        return not self._thread.is_alive()
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    @property
+    def name(self) -> str:
+        return self._thread.name
+
+
+class TickLadder:
+    """Tick RATE as a degradation-ladder knob, duck-typing
+    ``control.swap.SelectorLadder``'s shed/climb protocol so the
+    adaptive controller can actuate it exactly like it sheds ensemble
+    members: rung 0 is the cheapest (slowest tick — least device work
+    per second), the last rung the richest (fastest tick — freshest
+    scores).  ``shed()`` slows the tick, ``climb()`` speeds it up;
+    both write ``ticker.interval`` atomically under the ladder lock.
+    """
+
+    def __init__(self, ticker: SlotTicker,
+                 intervals: Sequence[float],
+                 start: Optional[int] = None):
+        rungs = sorted({float(i) for i in intervals}, reverse=True)
+        if not rungs:
+            raise ValueError("TickLadder needs at least one interval")
+        if any(r <= 0 for r in rungs):
+            raise ValueError("tick intervals must be positive")
+        self.ticker = ticker
+        self._ladder = rungs
+        self._lock = threading.RLock()
+        pos = len(rungs) - 1 if start is None else int(start)
+        if not 0 <= pos < len(rungs):
+            raise ValueError(f"start rung {pos} outside ladder of "
+                             f"{len(rungs)}")
+        self._pos = pos
+        self._activate(rungs[pos])
+
+    @property
+    def ladder(self) -> List[float]:
+        return list(self._ladder)
+
+    @property
+    def ladder_pos(self) -> int:
+        return self._pos
+
+    @property
+    def active_interval(self) -> float:
+        return self._ladder[self._pos]
+
+    def can_shed(self) -> bool:
+        return self._pos > 0
+
+    def can_climb(self) -> bool:
+        return self._pos < len(self._ladder) - 1
+
+    def shed(self) -> bool:
+        with self._lock:
+            if not self.can_shed():
+                return False
+            self._pos -= 1
+            self._activate(self._ladder[self._pos])
+            return True
+
+    def climb(self) -> bool:
+        with self._lock:
+            if not self.can_climb():
+                return False
+            self._pos += 1
+            self._activate(self._ladder[self._pos])
+            return True
+
+    def swap_to(self, pos: int) -> None:
+        with self._lock:
+            if not 0 <= pos < len(self._ladder):
+                raise ValueError(f"rung {pos} outside ladder of "
+                                 f"{len(self._ladder)}")
+            self._pos = pos
+            self._activate(self._ladder[pos])
+
+    def _activate(self, interval: float) -> None:
+        self.ticker.interval = float(interval)

@@ -241,6 +241,59 @@ def test_watchdog_fails_stalled_cobatch_and_respawns():
     assert not srv.leaked               # replacement + stalled worker
 
 
+def test_watchdog_survives_thread_ident_reuse(monkeypatch):
+    """Regression: watchdog bookkeeping used to be keyed by
+    ``threading.get_ident()``.  The OS reuses idents once a thread
+    exits, so a replacement worker could inherit its stalled
+    predecessor's ``_abandoned`` entry and silently DISCARD a healthy
+    co-batch — the query never retired and conservation broke.  Force
+    the worst case (every thread reports the SAME ident) and run a
+    stall-then-healthy sequence: the healthy query must still retire
+    with its real score."""
+    import repro.serving.server as server_mod
+
+    class _SameIdent:
+        """``threading`` facade whose get_ident collides for everyone
+        (deterministic stand-in for OS-level ident reuse)."""
+
+        def __getattr__(self, name):
+            if name == "get_ident":
+                return lambda: 0xDEAD
+            return getattr(threading, name)
+
+    monkeypatch.setattr(server_mod, "threading", _SameIdent())
+    stalled = threading.Event()
+    release = threading.Event()
+
+    def batch_handler(windows):
+        if not stalled.is_set():
+            stalled.set()
+            release.wait(5.0)           # silent stall: no heartbeat
+        return [1.0] * len(windows)
+
+    srv = EnsembleServer(batch_handler=batch_handler, n_workers=1,
+                         max_batch=1, max_wait_ms=0.5,
+                         deadline_seconds=0.1,
+                         watchdog_interval=0.01).start()
+    srv.submit(0, {})                   # stalls worker 1
+    deadline = time.monotonic() + 2.0
+    while srv.stats.stalls < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert srv.stats.stalls == 1        # watchdog fired, worker 2 up
+    srv.submit(1, {})                   # healthy query on the new worker
+    while srv.stats.served < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    # pre-fix: worker 2 shares worker 1's ident, finds itself in
+    # _abandoned, discards the healthy scores and exits — served stays 1
+    assert srv.stats.served == 2
+    release.set()
+    stats = srv.stop()
+    assert stats.served == 2 and stats.failed == 1
+    scores = {p: s for p, s, *_ in srv.results()}
+    assert np.isnan(scores[0]) and scores[1] == 1.0
+    assert not srv.leaked
+
+
 def test_heartbeat_keeps_slow_recovery_alive():
     """A handler WAITING (and heart-beating) past the deadline is not a
     stall: the co-batch must be served late and REAL, the watchdog must

@@ -75,8 +75,32 @@ def test_server_stats_concurrent_record_and_read():
     for t in readers:
         t.join()
     assert stats.served == n_threads * per_thread
-    assert len(stats.latencies) == n_threads * per_thread
+    assert stats.n_latencies == n_threads * per_thread
     assert stats.slo_violations == n_threads * (per_thread // 10)
+
+
+def test_server_stats_memory_o1_at_soak_scale():
+    """Regression: ``ServerStats`` kept every latency in an unbounded
+    python list (O(n) memory, O(n log n) percentile reads), which made
+    hours-long soaks infeasible.  At 200x a chaos soak's query count
+    the latency state must stay a fixed-size histogram, with quantiles
+    inside the sketch's relative-error bound and the counters, sum and
+    max still EXACT."""
+    stats = ServerStats()
+    n = 400_000
+    lats = np.random.default_rng(5).lognormal(-3.0, 1.0, size=n)
+    for x in lats:
+        stats.record(float(x), False)
+    # pre-fix: a 400k-entry list (megabytes, one object per record);
+    # post-fix: one fixed bin array regardless of n
+    assert not hasattr(stats, "latencies")
+    assert stats._lat_counts.nbytes <= 64 * 1024
+    assert stats.n_latencies == stats.served == n
+    assert stats.mean_latency == pytest.approx(float(np.mean(lats)))
+    assert stats.max_latency == float(np.max(lats))
+    for pct in (50, 95, 99):
+        exact = float(np.percentile(lats, pct))
+        assert abs(stats.p(pct) - exact) <= REL_ERR_BOUND * exact
 
 
 def test_server_stats_shed_counter():

@@ -462,6 +462,35 @@ def test_multi_device_lane_subprocess():
     assert " skipped" not in r.stdout, tail[-2000:]
 
 
+# ----------------------------------------------------------- headroom
+def test_headroom_min_across_modalities_not_ecg_only(rng):
+    """Regression: ``DeviceIngest.headroom`` hardcoded the ECG ring, so
+    a vitals ring about to overrun reported full slack and the
+    backpressure guard admitted queries that went stale-then-NaN
+    downstream.  The aggregate signal is now the MIN across modalities
+    in window units (< 1.0 => shed); the per-ring sample views survive
+    via the modality arg and ``headroom_by_modality``."""
+    di = DeviceIngest([ModalitySpec("ecg", 250.0, 3),
+                       ModalitySpec("vitals", 1.0, 7)],
+                      n_patients=1, window_seconds=1.0)
+    di.ingest(0.0, 0, "ecg",
+              np.zeros((3, 250), np.float32))
+    di.ingest(0.0, 0, "vitals", np.zeros((7, 1), np.float32))
+    di.close_window(0, 1.0)
+    assert di.headroom(0) >= 1.0          # fresh: >= one window of slack
+    # the low-rate vitals ring overruns on its OWN clock while the ECG
+    # ring still has hundreds of samples of slack
+    di.ingest(1.0, 0, "vitals", np.zeros((7, 2), np.float32))
+    di.ingest(2.0, 0, "vitals", np.zeros((7, 1), np.float32))
+    by_mod = di.headroom_by_modality(0)
+    assert by_mod["ecg"] >= 250           # per-ring: ecg fine...
+    assert by_mod["vitals"] < 1           # ...vitals exhausted
+    assert di.headroom(0, "ecg") == by_mod["ecg"]
+    # pre-fix the aggregate WAS the ecg number (hundreds of samples);
+    # now it must surface the vitals overrun as backpressure
+    assert di.headroom(0) < 1.0
+
+
 # ------------------------------------------------------- warmup ladder
 def test_warmup_compiles_full_flush_ladder(zoo_members, rng):
     """After default ``warmup()`` every pow2 flush size 1..8 hits a

@@ -24,6 +24,8 @@ Four layers:
 Everything here is device-count-agnostic: the file must pass unchanged
 in the default single-device lane and the forced-8-device CI lane.
 """
+import threading
+import time
 from collections import Counter
 
 import numpy as np
@@ -436,6 +438,55 @@ def test_keyed_batcher_oldest_due_first():
     assert kb.ready() == "early"
     kb.pop_batch("early")
     assert kb.ready() == "late"
+
+
+def test_keyed_batcher_stats_never_torn_under_concurrent_pops():
+    """Regression: ``KeyedMicroBatcher.stats``/``lane_stats`` used to
+    expose the LIVE per-lane stats objects, which ``pop_batch`` mutates
+    field by field under the lane lock the reader never takes.  Any
+    consumer that combines two fields read at different moments — the
+    aggregate loop, a metrics exporter formatting one line per field —
+    sees values from different flushes.  With max_batch=1 every flush
+    carries exactly one item, so ANY consistent view has
+    ``n_flushes <= n_items``; a live object read across an ongoing pop
+    stream violates it (``n_items`` from before a flush, ``n_flushes``
+    from after).  Both surfaces must return internally-consistent
+    snapshots no matter how slowly the caller consumes the fields."""
+    kb = KeyedMicroBatcher(max_batch=1, max_wait_ms=0.0)
+    stop = threading.Event()
+    torn = []
+
+    def popper(lane):
+        i = 0
+        while not stop.is_set():
+            kb.push(lane, i)
+            kb.pop_batch(lane)
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            # Field reads deliberately straddle a delay: a snapshot is
+            # immutable so this is safe; a live lane object tears.
+            views = [("agg", kb.stats)]
+            views += [(k, ls) for k, ls in kb.lane_stats().items()]
+            items = [(k, v.n_items) for k, v in views]
+            time.sleep(0.002)          # pops keep landing in between
+            for (k, v), (_, n_it) in zip(views, items):
+                if v.n_flushes > n_it:
+                    torn.append((k, n_it, v.n_flushes))
+
+    threads = ([threading.Thread(target=popper, args=(ln,))
+                for ln in ("a", "b")]
+               + [threading.Thread(target=reader) for _ in range(2)])
+    for th in threads:
+        th.start()
+    time.sleep(1.0)
+    stop.set()
+    for th in threads:
+        th.join()
+    assert torn == []
+    s = kb.stats                       # quiescent: exact equality
+    assert s.n_flushes == s.n_items > 0
 
 
 def test_server_coalesces_within_tier_only():
