@@ -549,6 +549,122 @@ def bench_placement_sweep(device_counts=(1, 2, 4, 8),
     return out
 
 
+HETERO_TOP_KEYS = ("n_devices", "speeds", "bucket_costs_ms",
+                   "makespan_blind_s", "makespan_aware_s",
+                   "imbalance_blind", "imbalance_aware",
+                   "aware_below_blind", "bitwise_equal")
+
+
+def check_placement_hetero_schema(out: Dict) -> None:
+    """Schema + invariant guard for
+    ``BENCH_serving.json["placement_hetero"]``: on a 1x/4x split the
+    speed-aware plan must land strictly below the speed-blind plan
+    re-scored under the true speeds, and sharded serving under the
+    aware plan must stay bitwise equal to the unsharded oracle."""
+    for k in HETERO_TOP_KEYS:
+        assert k in out, f"placement_hetero bench missing key {k!r}"
+    assert out["bitwise_equal"] is True, \
+        "hetero-placed sharded serving diverged from the oracle"
+    assert out["aware_below_blind"] is True, \
+        (f"speed-aware makespan {out['makespan_aware_s']:.4f}s not "
+         f"below speed-blind {out['makespan_blind_s']:.4f}s")
+    assert out["makespan_aware_s"] < out["makespan_blind_s"]
+
+
+def check_placement_hetero_file(path: str = BENCH_JSON) -> None:
+    """CI gate on the committed BENCH_serving.json["placement_hetero"]
+    section."""
+    with open(path) as f:
+        data = json.load(f)
+    assert "placement_hetero" in data, \
+        "BENCH_serving.json missing 'placement_hetero'"
+    check_placement_hetero_schema(data["placement_hetero"])
+    print(f"placement_hetero schema OK ({path})")
+
+
+def bench_placement_hetero(n_devices: int = 4,
+                           speeds=(1.0, 1.0, 4.0, 4.0),
+                           n_patients: int = 16, reps: int = 5,
+                           input_len: int = 750, verbose=True,
+                           write_json: bool = True) -> Dict:
+    """Heterogeneous-pool placement on the reduced zoo: a synthetic
+    1x/4x device-speed split (slow devices FIRST, so a speed-blind LPT
+    plan is maximally unlucky — its heaviest buckets land on the slow
+    half).  Records
+
+    * ``makespan_blind_s`` — the speed-blind plan RE-SCORED under the
+      true speed vector (``Placement(assignment, loads, speeds)``),
+      i.e. what the pool would actually deliver if planned blind;
+    * ``makespan_aware_s`` — the speed-vector LPT plan's finish time,
+      which must land strictly below blind;
+    * ``bitwise_equal``    — sharded serving under the aware plan vs
+      the unsharded oracle (placement must never change scores).
+
+    Merged into ``BENCH_serving.json`` under ``"placement_hetero"``."""
+    import jax
+    from repro.configs.ecg_zoo import zoo_specs
+    from repro.models.ecg_resnext import init_ecg
+    from repro.serving.pipeline import EnsembleService, ZooMember
+    from repro.serving.placement import Placement
+
+    avail = jax.device_count()
+    if avail < n_devices:
+        if verbose:
+            print(f"\nplacement hetero bench skipped: {avail} host "
+                  f"devices < {n_devices} (force with XLA_FLAGS)")
+        return {}
+    speeds = [float(s) for s in speeds]
+    assert len(speeds) == n_devices
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    members = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+               for i, s in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    windows = [{"ecg": rng.standard_normal((3, input_len))
+                .astype(np.float32)} for _ in range(n_patients)]
+
+    base = EnsembleService(members)
+    oracle = np.asarray(base.predict_batch(windows), np.float64)
+    bucket_costs = base.measured_bucket_costs(reps=reps,
+                                              batch=n_patients)
+    blind = base.plan_placement(n_devices, bucket_costs=bucket_costs)
+    # what the blind plan actually costs on the heterogeneous pool
+    blind_true = Placement(blind.assignment, blind.loads, speeds=speeds)
+    aware = base.plan_placement(n_devices, bucket_costs=bucket_costs,
+                                speeds=speeds)
+
+    svc = EnsembleService(members, placement=aware,
+                          devices=jax.devices()[:n_devices])
+    got = np.asarray(svc.predict_batch(windows), np.float64)
+    out: Dict = {
+        "n_devices": n_devices, "speeds": speeds,
+        "n_patients": n_patients, "reps": reps,
+        "input_len": input_len,
+        "bucket_costs_ms": [c * 1e3 for c in bucket_costs],
+        "makespan_blind_s": blind_true.makespan,
+        "makespan_aware_s": aware.makespan,
+        "imbalance_blind": blind_true.imbalance,
+        "imbalance_aware": aware.imbalance,
+        "aware_below_blind":
+            bool(aware.makespan < blind_true.makespan * (1.0 - 1e-9)),
+        "bitwise_equal": bool(np.array_equal(got, oracle,
+                                             equal_nan=True)),
+    }
+    if verbose:
+        print(f"\nplacement hetero bench ({n_devices} devices, speeds "
+              f"{speeds}):")
+        print(f"  speed-blind plan under true speeds: "
+              f"{blind_true.makespan * 1e3:6.1f} ms "
+              f"(imb {blind_true.imbalance:.2f})")
+        print(f"  speed-aware plan:                   "
+              f"{aware.makespan * 1e3:6.1f} ms "
+              f"(imb {aware.imbalance:.2f})")
+        print(f"  aware below blind: {out['aware_below_blind']}   "
+              f"bitwise vs oracle: {out['bitwise_equal']}")
+    if write_json:
+        _merge_bench_json({"placement_hetero": out})
+    return out
+
+
 def bench_measured_costs(verbose=True) -> Dict:
     """Real wall-clock per-member inference cost (timeit analogue of
     A.4's 'Time in PyTorch' curve) for a few zoo members."""
@@ -578,6 +694,11 @@ if __name__ == "__main__":
                          "BENCH_serving.json['ingest'] schema, write "
                          "nothing")
     args = ap.parse_args()
+    # force host devices before jax initialises (jax is imported
+    # lazily): the placement benches need a multi-device pool in BOTH
+    # modes; the unsharded benches are indifferent to the count
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     if args.smoke:
         bench_fused_serving(n_patients=4, reps=2, input_len=250,
                             write_json=False)
@@ -589,13 +710,15 @@ if __name__ == "__main__":
                           input_len=250, write_json=False)
         check_slots_schema(out)
         print("slots schema OK")
+        out = bench_placement_hetero(n_patients=4, reps=2,
+                                     input_len=250, write_json=False)
+        check_placement_hetero_schema(out)
+        print("placement_hetero schema OK")
     else:
-        # standalone entry point for the multi-device sweep: the flag
-        # must land before jax initialises (jax is imported lazily)
-        os.environ.setdefault(
-            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
         bench_fused_serving()
         bench_ingest()
         bench_slots()
         check_slots_file()
         bench_placement_sweep()
+        bench_placement_hetero()
+        check_placement_hetero_file()

@@ -108,8 +108,13 @@ class AdaptiveController:
         # signature of a plan a RE-PLACE failed to improve: while the
         # active placement still matches it, the imbalance is inherent
         # (LPT cannot do better), so REPLACE must stand aside instead
-        # of re-measuring every step and starving recompose/climb
+        # of re-measuring every step and starving recompose/climb.
+        # The brand also records the imbalance it was issued at: live
+        # finish-time imbalance GROWING past that level re-arms REPLACE
+        # (drifting shard costs can make a once-unimprovable plan
+        # improvable)
         self._replace_noop_sig: Optional[bytes] = None
+        self._replace_noop_imb: Optional[float] = None
         if config is None:
             config = ControllerConfig(slo_seconds=telemetry.slo)
         elif abs(config.slo_seconds - telemetry.slo) > 1e-12:
@@ -139,6 +144,18 @@ class AdaptiveController:
         return placement_signature(
             getattr(self.swapper, "active_placement", None))
 
+    def _replace_branded(self, imbalance: float) -> bool:
+        """True while REPLACE must stand aside: the active plan still
+        matches the last no-op brand AND the measured imbalance has not
+        grown past the level the brand was issued at.  'LPT could not
+        do better' is a statement about the costs seen at brand time,
+        not a permanent property of the plan — under drift-fed
+        re-planning, growth means new evidence."""
+        if self._active_placement_sig() != self._replace_noop_sig:
+            return False
+        return (self._replace_noop_imb is None
+                or imbalance <= self._replace_noop_imb + 1e-9)
+
     # ---------------------------------------------------------- policy
     def decide(self, snap: TelemetrySnapshot) -> Decision:
         """Pure policy (no side effects) — unit-testable in isolation."""
@@ -152,7 +169,7 @@ class AdaptiveController:
         if self._can_replace \
                 and np.isfinite(snap.placement_imbalance) \
                 and snap.placement_imbalance > c.imbalance_high \
-                and self._active_placement_sig() != self._replace_noop_sig:
+                and not self._replace_branded(snap.placement_imbalance):
             return Decision.REPLACE        # rebalance before re-search
         if np.isfinite(snap.predicted_latency) \
                 and snap.predicted_latency > c.predicted_factor \
@@ -204,7 +221,7 @@ class AdaptiveController:
         elif decision is Decision.RECOMPOSE:
             acted = self._launch_recompose(snap)
         elif decision is Decision.REPLACE:
-            acted = self._launch_replace()
+            acted = self._launch_replace(snap)
         if not acted:
             # nothing actually changed (rung race, recompose already in
             # flight): don't log a phantom action or start a cooldown
@@ -222,32 +239,37 @@ class AdaptiveController:
             out[d.value] = out.get(d.value, 0) + 1
         return out
 
-    def _launch_replace(self) -> bool:
-        """RE-PLACE: fresh costs -> fresh LPT plan -> hot-swap the same
-        selector onto the new shards.  Like recompose, the expensive
-        measure+stage runs in a daemon thread (``sync=False``) so the
-        monitor loop stays free to SHED mid-rebalance; ``sync=True``
-        actuates inline and returns whether the plan actually changed
-        (a no-op must not start a cooldown).
+    def _launch_replace(self, snap: TelemetrySnapshot) -> bool:
+        """RE-PLACE: live drift costs (or fresh measurement) -> fresh
+        LPT plan -> hot-swap the same selector onto the new shards.
+        Like recompose, the expensive measure+stage runs in a daemon
+        thread (``sync=False``) so the monitor loop stays free to SHED
+        mid-rebalance; ``sync=True`` actuates inline and returns
+        whether the plan actually changed (a no-op must not start a
+        cooldown).
 
-        A plan re_place could not improve is remembered by signature so
-        REPLACE is not re-tried (re-measuring every step would starve
-        recompose/climb) until the placement changes some other way —
-        unless the signature moved underneath (re_place lost a race to
-        a selector swap), in which case the never-tried new placement
-        must not inherit the no-op brand."""
+        A plan re_place could not improve is remembered by signature —
+        plus the imbalance it was tried at — so REPLACE is not
+        re-tried (re-measuring every step would starve recompose/
+        climb) until the placement changes some other way or the
+        measured imbalance grows past the branded level; a signature
+        that moved underneath (re_place lost a race to a selector
+        swap) means the never-tried new placement must not inherit the
+        no-op brand."""
         if self._replacing.is_set():
             return False
         self._replacing.set()
         sig_before = self._active_placement_sig()
+        imb_at_decision = snap.placement_imbalance
 
         def run() -> bool:
             try:
                 acted = self.swapper.re_place()
-                self._replace_noop_sig = sig_before \
-                    if not acted \
-                    and self._active_placement_sig() == sig_before \
-                    else None
+                noop = (not acted
+                        and self._active_placement_sig() == sig_before)
+                self._replace_noop_sig = sig_before if noop else None
+                self._replace_noop_imb = \
+                    imb_at_decision if noop else None
                 return acted
             finally:
                 self._replacing.clear()

@@ -312,8 +312,15 @@ def wire_controller(telemetry, swapper, member_costs=None,
 
     ``member_costs`` (per-member service seconds, e.g. from
     ``EnsembleService.measured_bucket_costs``) powers the service
-    profile: mu from the active selector's total cost, T_s and
-    imbalance from the active placement's measured makespan.
+    profile: mu from the active selector's total cost (scaled by
+    ``swapper.speeds`` on a heterogeneous pool).  T_s and imbalance
+    prefer the LIVE per-slot finish times measured from shard retire
+    EWMAs (``EnsembleService.measured_finish_times``) — a device that
+    slowed down after planning shows up there, never in the planned
+    loads — falling back to the ACTIVE placement's finish-time
+    makespan/imbalance (never a fresh idealized LPT plan: a
+    deliberately unbalanced post-failover plan must be profiled as
+    what it is).
 
     ``exporter`` (an ``obs.export.MetricsExporter``) is attached to the
     returned controller so scrapes see live decision counters;
@@ -326,15 +333,27 @@ def wire_controller(telemetry, swapper, member_costs=None,
         else np.asarray(member_costs, np.float64)
 
     def profile_fn():
+        from repro.serving.placement import finish_imbalance
         sel = np.asarray(swapper.active_selector, bool)
         pl = swapper.active_placement
-        imb = pl.imbalance if pl is not None else float("nan")
+        svc = getattr(getattr(swapper, "facade", None), "current", None)
+        fin = getattr(svc, "measured_finish_times", None)
+        fin = fin() if callable(fin) else None
+        if fin is not None and pl is not None \
+                and len(fin) == pl.n_slots:
+            ts_live, imb = max(fin), finish_imbalance(fin)
+        elif pl is not None:
+            ts_live, imb = pl.makespan, pl.imbalance
+        else:
+            ts_live, imb = None, float("nan")
         if costs is None:
-            return (float("inf"), 0.0, imb)
+            return (float("inf"), ts_live or 0.0, imb)
         total = float(costs[sel].sum()) or 1e-9
-        n_dev = max(1, getattr(swapper, "n_devices", 1))
-        ts = pl.makespan if pl is not None else total
-        return (n_dev / total, ts, imb)
+        speeds = getattr(swapper, "speeds", None)
+        capacity = float(np.sum(speeds)) if speeds else \
+            max(1, getattr(swapper, "n_devices", 1))
+        ts = ts_live if ts_live is not None else total
+        return (capacity / total, ts, imb)
 
     ctl = AdaptiveController(telemetry, swapper, recompose_fn=recompose_fn,
                              config=config, service_profile_fn=profile_fn,

@@ -231,7 +231,9 @@ class HotSwapper(SelectorLadder):
                  placement_fn: Optional[
                      Callable[[np.ndarray], Placement]] = None,
                  cost_reps: int = 3,
-                 staging: Optional[StagingCache] = None):
+                 staging: Optional[StagingCache] = None,
+                 speeds: Optional[Sequence[float]] = None,
+                 plan_batch: Optional[int] = None):
         super().__init__(initial_selector)
         self.pool = list(pool)
         # fault-plane seam: when set, called with every service stage()
@@ -252,6 +254,16 @@ class HotSwapper(SelectorLadder):
         self.devices = list(devices) if devices is not None else None
         self.placement_fn = placement_fn
         self.cost_reps = cost_reps
+        # heterogeneous pool: speeds[i] is devices[i]'s relative speed
+        # (work units/s vs the reference device costs are measured on);
+        # None == homogeneous.  Quarantine keeps the SURVIVOR
+        # sub-vector aligned with the shrunken device list.
+        self.speeds = list(speeds) if speeds is not None else None
+        if self.speeds is not None and any(s <= 0 for s in self.speeds):
+            raise ValueError(f"speeds must be > 0: {self.speeds}")
+        # flush rung bucket costs are measured at when planning (None =
+        # the pipeline's representative PLAN_BATCH default)
+        self.plan_batch = plan_batch
         self.active_placement: Optional[Placement] = None
         # staging may be SHARED between lanes (per-acuity-tier ladders
         # over one pool): identical (selector, placement) pairs then
@@ -295,13 +307,25 @@ class HotSwapper(SelectorLadder):
             # refuses such plans rather than folding slots silently)
             avail = len(self.devices) if self.devices is not None \
                 else jax.device_count()
+            k = min(self.n_devices, avail)
             msvc = self._measure_service(selector)
-            pl = msvc.plan_placement(min(self.n_devices, avail),
-                                     reps=self.cost_reps) \
+            pl = msvc.plan_placement(k, reps=self.cost_reps,
+                                     batch=self.plan_batch,
+                                     speeds=self._slot_speeds(k)) \
                 if len(msvc.members) else None
         with self._stage_lock:
             self._placements[key] = pl
         return pl
+
+    def _slot_speeds(self, k: int) -> Optional[List[float]]:
+        """The first ``k`` device speeds (plan slots map onto the first
+        k devices of the pool); None for a homogeneous pool."""
+        if self.speeds is None:
+            return None
+        if len(self.speeds) < k:
+            raise ValueError(f"{len(self.speeds)} speeds < {k} "
+                             f"plan slots")
+        return list(self.speeds[:k])
 
     def _measure_service(self, selector: np.ndarray):
         """Unsharded service used to measure bucket costs, cached per
@@ -381,9 +405,15 @@ class HotSwapper(SelectorLadder):
     def re_place(self, placement: Optional[Placement] = None) -> bool:
         """Hot-swap the ACTIVE selector onto a new device plan — the
         controller's RE-PLACE action.  ``placement=None`` re-derives
-        the LPT plan from freshly measured bucket costs.  Returns True
-        iff the plan actually changed (a no-op re-derivation must not
-        cost a swap or start a controller cooldown).
+        the LPT plan from MEASURED DRIFT first: the live service's
+        per-shard retire EWMAs (``live_bucket_costs``) reflect what
+        devices are actually doing right now — a device that slowed
+        down shows up there, never in a fresh offline measurement pass
+        on the reference device.  Only when no live costs exist yet
+        (no flush observed, or a non-bucket-aligned plan) does it fall
+        back to the fresh offline measurement.  Returns True iff the
+        plan actually changed (a no-op re-derivation must not cost a
+        swap or start a controller cooldown).
 
         The expensive steps — cost measurement and staging — run
         OUTSIDE ``_swap_lock``, so an emergency shed/climb is never
@@ -392,8 +422,11 @@ class HotSwapper(SelectorLadder):
         with self._swap_lock:
             sel = self.active_selector.copy()
             gen = self._devices_gen
-        pl = placement if placement is not None \
-            else self.placement_for(sel, fresh=True)
+        pl = placement
+        if pl is None:
+            pl = self._drift_placement(sel)
+        if pl is None:
+            pl = self.placement_for(sel, fresh=True)
         if placement_signature(pl) \
                 == placement_signature(self.active_placement):
             return False
@@ -413,6 +446,27 @@ class HotSwapper(SelectorLadder):
             self._evict_stale(sel)
             return True
 
+    def _drift_placement(self, sel: np.ndarray) -> Optional[Placement]:
+        """LPT plan re-derived from the ACTIVE service's live shard
+        retire EWMAs (device-independent work units — de-normalized by
+        each shard's slot speed), at the current slot count and speed
+        sub-vector.  None when drift can't drive a plan: an external
+        ``placement_fn`` owns planning, the deployment is unsharded, or
+        the live service hasn't observed every bucket yet."""
+        if self.placement_fn is not None or not self.sharded:
+            return None
+        svc = self.facade.current
+        live = getattr(svc, "live_bucket_costs", None)
+        costs = live() if callable(live) else None
+        if costs is None or not len(getattr(svc, "members", ())):
+            return None
+        import jax
+        avail = len(self.devices) if self.devices is not None \
+            else jax.device_count()
+        k = min(self.n_devices, avail)
+        return svc.plan_placement(k, bucket_costs=costs,
+                                  speeds=self._slot_speeds(k))
+
     @staticmethod
     def _failover_placement(old: Optional[Placement],
                             dead_slot: int) -> Optional[Placement]:
@@ -430,11 +484,17 @@ class HotSwapper(SelectorLadder):
             return None
         assignment = [list(s) for s in old.assignment]
         loads = list(old.loads)
+        speeds = None if old.speeds is None else [
+            s for i, s in enumerate(old.speeds) if i != dead_slot]
         moved, moved_load = assignment.pop(dead_slot), loads.pop(dead_slot)
-        j = int(np.argmin(loads))
+        # least-FINISH-TIME survivor absorbs the orphans: on a
+        # heterogeneous pool the least-loaded slot may be the slowest
+        j = int(np.argmin([l / speeds[i] if speeds is not None else l
+                           for i, l in enumerate(loads)]))
         assignment[j] = assignment[j] + moved
         loads[j] += moved_load
-        return Placement(assignment=assignment, loads=loads)
+        return Placement(assignment=assignment, loads=loads,
+                         speeds=speeds)
 
     def quarantine_device(self, device) -> bool:
         """Remove a dead device from the pool and hot-swap the ACTIVE
@@ -473,6 +533,10 @@ class HotSwapper(SelectorLadder):
             devs.remove(device)
             self.devices = devs
             self.n_devices = min(self.n_devices, len(devs))
+            if self.speeds is not None and dead_slot < len(self.speeds):
+                # survivor speed sub-vector stays aligned with devices
+                self.speeds = (list(self.speeds[:dead_slot])
+                               + list(self.speeds[dead_slot + 1:]))
             self._devices_gen += 1
             sel = self.active_selector.copy()
             old_pl = self.active_placement

@@ -97,6 +97,18 @@ class LatencyProfiler:
     # infeasible configurations (OOM / unstable queue) get a large FINITE
     # latency so surrogate models can still fit the profiled set
     infeasible_latency: float = 100.0
+    # per-device relative speeds (heterogeneous pool): costs are
+    # reference-device seconds, so device j serves cost c in
+    # c / device_speeds[j] seconds.  None == homogeneous (unit) pool;
+    # length must equal config.n_devices when given.
+    device_speeds: Optional[Sequence[float]] = None
+
+    def _speeds(self) -> Optional[Sequence[float]]:
+        sp = self.device_speeds
+        if sp is not None and len(sp) != self.config.n_devices:
+            raise ValueError(f"{len(sp)} device_speeds != "
+                             f"{self.config.n_devices} devices")
+        return sp
 
     def model_cost(self, i: int) -> float:
         if self.cost_fn is not None:
@@ -122,16 +134,22 @@ class LatencyProfiler:
         if not costs:
             return self.fixed_overhead
         if placement is None:
-            placement = lpt_placement(costs, self.config.n_devices)
+            placement = lpt_placement(costs, self.config.n_devices,
+                                      speeds=self._speeds())
         return placement.makespan + self.fixed_overhead
 
     def throughput(self, b: np.ndarray) -> float:
-        """mu (queries/s): total device-seconds per ensemble query is
-        sum(costs)/n_devices under perfect pipelining."""
+        """mu (queries/s): total reference-device work per ensemble
+        query is sum(costs); the pool retires sum(speeds) work units
+        per second under perfect pipelining, so
+        mu = sum(speeds) / sum(costs) (n_devices/total when unit)."""
         total = sum(self.model_cost(i) for i in range(len(b)) if b[i])
         if total <= 0:
             return float("inf")
-        return self.config.n_devices / total
+        sp = self._speeds()
+        capacity = (float(np.sum(sp)) if sp is not None
+                    else float(self.config.n_devices))
+        return capacity / total
 
     def query_arrivals(self) -> np.ndarray:
         """Ensemble queries: each patient fires once per observation
@@ -144,12 +162,17 @@ class LatencyProfiler:
              + phases[:, None])
         return np.sort(t.ravel())
 
-    def __call__(self, b: np.ndarray) -> float:
+    def __call__(self, b: np.ndarray,
+                 placement: Optional[Placement] = None) -> float:
+        """A caller holding the ACTIVE placement (e.g. a post-failover,
+        deliberately unbalanced interim plan) must pass it: a fresh LPT
+        plan here would understate T_s exactly when the controller's
+        risk prediction matters most."""
         b = np.asarray(b).astype(bool)
         if self.ensemble_memory(b) > (self.config.device_mem_bytes
                                       * self.config.n_devices):
             return self.infeasible_latency
-        Ts = self.serving_latency(b)
+        Ts = self.serving_latency(b, placement=placement)
         mu = self.throughput(b)
         lam = self.config.n_patients / self.config.window_seconds
         if lam >= mu:

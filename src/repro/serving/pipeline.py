@@ -95,6 +95,7 @@ class _Bucket:
     stacked: Dict                 # stack_members() pytree, leading axis M
     fn: Callable                  # jitted [M, P, L, 1] -> scores [M, P]
     device: object = None         # jax.Device the shard is pinned to
+    slot: int = 0                 # placement slot index (0 if unsharded)
 
 
 def _make_member_fn(params: Dict, spec: EcgModelSpec,
@@ -151,6 +152,17 @@ def _make_bucket_fn(spec: EcgModelSpec, leads: Sequence[int],
 # every path (packed / refs / legacy) and the ingest side share one
 # log2-bounded set of compiled shapes
 _next_pow2 = pow2_rung
+
+# representative flush rung for placement-planning cost measurement:
+# serving flushes pad to the pow2 ladder (top default warmup rung 8),
+# and per-bucket cost RATIOS at batch 1 differ from ratios at flush
+# size (fixed dispatch overhead dominates small stacked calls), so
+# planning from batch-1 timings skews the LPT plan
+PLAN_BATCH = 8
+
+# EWMA weight for per-shard retire-time tracking (O(1) state per
+# (bucket, device) shard; higher = drift shows faster, noisier)
+RETIRE_ALPHA = 0.3
 
 
 @functools.lru_cache(maxsize=None)
@@ -223,6 +235,13 @@ class EnsembleService:
         # spent building/transferring them (the marshaling cost)
         self.h2d_bytes = 0
         self.marshal_seconds = 0.0
+        # live per-shard retire times: (bucket member tuple) -> EWMA of
+        # wall-clock seconds from that shard's dispatch to its retire
+        # on the fused flush path.  O(1) state per shard (no lists) —
+        # the drift signal HotSwapper.re_place / the controller's
+        # finish-time imbalance consume.
+        self.retire_alpha = RETIRE_ALPHA
+        self._shard_ewma: Dict[Tuple[int, ...], float] = {}
         self._count_lock = threading.Lock()    # server workers share us
         self._fns: List[Callable] = [
             _make_member_fn(m.params, m.spec, impl) for m in self.members]
@@ -250,7 +269,7 @@ class EnsembleService:
     def _build_buckets(self) -> List[_Bucket]:
         specs = [m.spec for m in self.members]
         if self.placement is None:
-            groups = [(None, list(range(len(specs))))]
+            groups = [(0, None, list(range(len(specs))))]
         else:
             devs = self._devices if self._devices is not None \
                 else jax.devices()
@@ -263,11 +282,11 @@ class EnsembleService:
                 raise ValueError(
                     f"placement uses slot {used[-1]} but only "
                     f"{len(devs)} device(s) are available")
-            groups = [(devs[d], list(slot))
+            groups = [(d, devs[d], list(slot))
                       for d, slot in enumerate(self.placement.assignment)
                       if slot]
         out = []
-        for dev, mem_idx in groups:
+        for slot_idx, dev, mem_idx in groups:
             for local in bucket_zoo([specs[i] for i in mem_idx]).values():
                 idx = [mem_idx[j] for j in local]
                 spec = specs[idx[0]]
@@ -282,7 +301,7 @@ class EnsembleService:
                     stacked=stacked,
                     fn=_make_bucket_fn(spec, leads, self.impl,
                                        self.marshal),
-                    device=dev))
+                    device=dev, slot=slot_idx))
         return out
 
     @property
@@ -293,19 +312,29 @@ class EnsembleService:
 
     def plan_placement(self, n_devices: int,
                        bucket_costs: Optional[Sequence[float]] = None,
-                       reps: int = 3) -> Placement:
+                       reps: int = 3,
+                       batch: Optional[int] = None,
+                       speeds: Optional[Sequence[float]] = None
+                       ) -> Placement:
         """LPT plan over measured (or given) per-bucket costs, at BUCKET
         granularity: a stacked bucket is atomic, so the plan never splits
         one stacked dispatch across devices.  The returned assignment is
-        in member indices, ready for ``EnsembleService(placement=...)``."""
+        in member indices, ready for ``EnsembleService(placement=...)``.
+
+        Costs are measured at a REPRESENTATIVE FLUSH RUNG (``batch``,
+        default ``PLAN_BATCH``): serving pads flushes to the pow2
+        ladder, and per-bucket cost ratios at batch 1 differ from the
+        ratios the plan will actually see.  ``speeds`` (one per slot)
+        makes the plan heterogeneity-aware — see ``lpt_placement``."""
         groups = list(bucket_zoo([m.spec for m in self.members]).values())
         if bucket_costs is None:
             if self.placement is not None:
                 raise ValueError("measure bucket costs on an unsharded "
                                  "service (or pass bucket_costs)")
-            bucket_costs = self.measured_bucket_costs(reps=reps)
+            bucket_costs = self.measured_bucket_costs(
+                reps=reps, batch=PLAN_BATCH if batch is None else batch)
         return grouped_lpt_placement(groups, list(bucket_costs),
-                                     n_devices)
+                                     n_devices, speeds=speeds)
 
     # ---------------------------------------------------------- warmup
     def _bucket_input(self, b: _Bucket, p: int) -> jax.Array:
@@ -449,19 +478,95 @@ class EnsembleService:
         guard = self.dispatch_guard
         t_dispatch = time.perf_counter()
         for b in self._buckets:
+            # per-shard clock starts BEFORE the guard: an injected
+            # per-device stall (faults seam) is device time and must
+            # drift that shard's retire EWMA
+            t_b = time.perf_counter()
             if guard is not None:
                 guard(b.device)
             y = b.fn(b.stacked, dev_wins[(b.spec.input_len, b.device)])
-            pending.append((b, y))                     # async dispatch
+            pending.append((b, y, t_b))                # async dispatch
         with self._count_lock:
             self.dispatch_count += len(pending)
         t_gather = time.perf_counter()
         _spans.note("dispatch", t_gather - t_dispatch)
-        for b, y in pending:      # one sync point: cross-device gather
+        for b, y, t_b in pending: # one sync point: cross-device gather
             score_mat[b.idx] = np.asarray(
                 jax.block_until_ready(y))[:, :P]
+            self._record_retire(b, time.perf_counter() - t_b)
         _spans.note("gather", time.perf_counter() - t_gather)
         return score_mat
+
+    # ------------------------------------------- live shard cost drift
+    def _record_retire(self, b: _Bucket, dt: float) -> None:
+        """Fold one shard's dispatch->retire wall-clock into its EWMA.
+        Attribution is gather-order conservative: shards retired behind
+        a slower same-flush shard inherit some of its wait, but a
+        persistently slow DEVICE inflates its own shards' EWMAs on
+        every flush, so the drift signal converges over repeated
+        flushes."""
+        key = tuple(sorted(b.idx))
+        with self._count_lock:
+            prev = self._shard_ewma.get(key)
+            self._shard_ewma[key] = dt if prev is None else (
+                self.retire_alpha * dt
+                + (1.0 - self.retire_alpha) * prev)
+
+    def shard_cost_snapshot(self) -> Dict[Tuple[int, ...], float]:
+        """Live per-shard retire EWMAs, keyed by the shard's sorted
+        member-index tuple (stable across re-placements for
+        bucket-aligned plans).  Empty until the first fused flush."""
+        with self._count_lock:
+            return dict(self._shard_ewma)
+
+    def live_bucket_costs(self) -> Optional[List[float]]:
+        """Measured per-architecture-bucket costs in DEVICE-INDEPENDENT
+        work units (retire EWMA x the speed of the slot the bucket
+        currently runs on), ordered like ``plan_placement``'s groups —
+        i.e. a drop-in ``bucket_costs`` vector for re-planning from
+        drift instead of a fresh offline measurement pass.  None until
+        every bucket has been observed, or when the active plan is not
+        bucket-aligned (member-split shards don't map back to
+        architecture buckets)."""
+        snap = self.shard_cost_snapshot()
+        if not snap:
+            return None
+        groups = list(bucket_zoo([m.spec for m in self.members]).values())
+        speed_of = {}
+        if self._bucket_cache is not None:
+            sp = self.placement.speeds if self.placement is not None \
+                else None
+            for b in self._bucket_cache:
+                speed_of[tuple(sorted(b.idx))] = (
+                    sp[b.slot] if sp is not None else 1.0)
+        out = []
+        for g in groups:
+            key = tuple(sorted(g))
+            dt = snap.get(key)
+            if dt is None:
+                return None
+            out.append(dt * speed_of.get(key, 1.0))
+        return out
+
+    def measured_finish_times(self) -> Optional[List[float]]:
+        """Live per-slot finish times (device wall-clock seconds): the
+        max retire EWMA over the shards pinned to each slot — the
+        last shard to retire IS the device's finish.  None until every
+        shard has been observed.  Idle slots report 0.0, so the
+        finish-time imbalance over this vector catches stranded
+        devices."""
+        if self._bucket_cache is None:
+            return None
+        snap = self.shard_cost_snapshot()
+        n_slots = self.placement.n_slots if self.placement is not None \
+            else 1
+        fin = [0.0] * n_slots
+        for b in self._bucket_cache:
+            dt = snap.get(tuple(sorted(b.idx)))
+            if dt is None:
+                return None
+            fin[b.slot] = max(fin[b.slot], dt)
+        return fin
 
     def _predict_refs(self, batch: Sequence[DeviceWindowRef]
                       ) -> List[float]:

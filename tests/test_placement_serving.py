@@ -22,6 +22,7 @@ Three layers:
 import os
 import subprocess
 import sys
+import time
 
 import numpy as np
 import pytest
@@ -34,10 +35,11 @@ except ModuleNotFoundError:
 import jax
 
 from repro.configs.ecg_zoo import bucket_zoo
-from repro.serving.placement import (Placement, grouped_lpt_placement,
+from repro.serving.placement import (Placement, finish_imbalance,
+                                     grouped_lpt_placement,
                                      lpt_placement, placement_signature,
                                      plan_pod_ensemble)
-from repro.serving.pipeline import EnsembleService
+from repro.serving.pipeline import PLAN_BATCH, EnsembleService
 
 N_FORCED = 8
 IN_LANE = jax.device_count() >= N_FORCED
@@ -132,6 +134,165 @@ def test_plan_pod_ensemble_assigns_every_member(costs, k):
     assert set(out.values()) <= set(range(max(1, k)))
 
 
+# ------------------------------------------ speed-vector LPT properties
+# Speeds are drawn from a pow2 grid: real pools come in speed CLASSES
+# (a CPU node, a 2x accelerator, a 4x accelerator), and on that space
+# the greedy planner's monotonicity properties hold exhaustively (for
+# arbitrary continuous speeds pure greedy LPT admits rare sub-0.1%
+# makespan regressions under a speed increase — a planner swap this
+# repo deliberately avoids to keep unit-speed plans bitwise-stable).
+SPEED_GRID = (0.5, 1.0, 2.0, 4.0)
+SPEED_UPS = (2.0, 4.0, 8.0)
+
+
+@given(st.lists(st.floats(0.001, 1.0), min_size=1, max_size=16),
+       st.integers(1, 8), st.floats(0.25, 4.0))
+@settings(max_examples=40, deadline=None)
+def test_speed_lpt_uniform_speeds_reduce_bitwise(costs, k, s):
+    """Unit (and any all-equal) speed vector yields EXACTLY today's
+    speed-blind plan — assignment, loads, signature — so enabling the
+    heterogeneity API on a homogeneous pool changes nothing, including
+    staging-cache keys."""
+    blind = lpt_placement(costs, k)
+    for sp in ([1.0] * max(1, k), [s] * max(1, k)):
+        pl = lpt_placement(costs, k, speeds=sp)
+        assert pl.assignment == blind.assignment
+        assert pl.loads == blind.loads
+        assert pl.signature() == blind.signature()
+        assert pl.speeds == sp
+    assert blind.speeds is None
+    assert blind.finish_times == blind.loads
+
+
+@given(st.lists(st.floats(0.001, 1.0), min_size=1, max_size=12),
+       st.integers(1, 8),
+       st.lists(st.sampled_from(SPEED_GRID), min_size=8, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_speed_lpt_conserves_members_and_work(costs, k, speeds8):
+    """Heterogeneity moves work, never creates or destroys it: every
+    member placed once, loads stay cost sums (work units), finish
+    times are loads normalized by slot speed."""
+    sp = speeds8[:max(1, k)]
+    pl = lpt_placement(costs, k, speeds=sp)
+    placed = sorted(i for slot in pl.assignment for i in slot)
+    assert placed == list(range(len(costs)))
+    assert sum(pl.loads) == pytest.approx(sum(costs))
+    for slot, load in zip(pl.assignment, pl.loads):
+        assert load == pytest.approx(sum(costs[i] for i in slot))
+    for f, l, s in zip(pl.finish_times, pl.loads, sp):
+        assert f == pytest.approx(l / s)
+    assert pl.makespan == pytest.approx(max(pl.finish_times))
+
+
+@given(st.lists(st.floats(0.001, 1.0), min_size=1, max_size=12),
+       st.integers(2, 6),
+       st.lists(st.sampled_from(SPEED_GRID), min_size=6, max_size=6),
+       st.integers(0, 5), st.sampled_from(SPEED_UPS))
+@settings(max_examples=60, deadline=None)
+def test_speed_lpt_makespan_monotone_in_speedup(costs, k, speeds6,
+                                                which, factor):
+    """A device getting FASTER never worsens the planned makespan (on
+    the pow2 speed-class grid) — the invariant that lets RE-PLACE
+    treat a recovered/upgraded device as strictly-no-worse."""
+    sp = speeds6[:k]
+    base = lpt_placement(costs, k, speeds=sp).makespan
+    up = list(sp)
+    up[which % k] *= factor
+    assert lpt_placement(costs, k, speeds=up).makespan <= base + 1e-9
+
+
+@given(st.lists(st.floats(0.001, 1.0), min_size=1, max_size=12),
+       st.integers(1, 6),
+       st.lists(st.sampled_from(SPEED_GRID), min_size=7, max_size=7))
+@settings(max_examples=60, deadline=None)
+def test_speed_lpt_makespan_monotone_in_added_device(costs, k, speeds7):
+    """Adding a device (of any grid speed) never worsens the planned
+    makespan."""
+    sp = speeds7[:k]
+    base = lpt_placement(costs, k, speeds=sp).makespan
+    grown = lpt_placement(costs, k + 1, speeds=sp + [speeds7[k]])
+    assert grown.makespan <= base + 1e-9
+
+
+@given(st.integers(1, 12), st.integers(1, 6), st.floats(0.01, 1.0),
+       st.lists(st.sampled_from(SPEED_GRID), min_size=6, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_speed_lpt_stable_under_duplicates(n, k, c, speeds6):
+    """Duplicate costs AND duplicate speeds: ties break
+    deterministically, so repeated derivations agree bitwise and the
+    staging cache stays hot."""
+    costs = [c] * n
+    sp = speeds6[:k]
+    p1 = lpt_placement(costs, k, speeds=sp)
+    p2 = lpt_placement(costs, k, speeds=list(sp))
+    assert p1.assignment == p2.assignment
+    assert p1.signature() == p2.signature()
+
+
+def test_speed_lpt_puts_heavy_work_on_fast_devices():
+    """The point of the whole exercise: with a 4x device available the
+    heavy bucket lands there, and the speed-aware plan strictly beats
+    the speed-blind plan evaluated under the TRUE speeds."""
+    costs, speeds = [4.0, 1.0, 1.0, 1.0, 1.0], [1.0, 4.0]
+    aware = lpt_placement(costs, 2, speeds=speeds)
+    assert 0 in aware.assignment[1]       # heaviest item on the 4x slot
+    blind = lpt_placement(costs, 2)
+    blind_true = Placement(assignment=blind.assignment,
+                           loads=blind.loads, speeds=speeds)
+    assert aware.makespan < blind_true.makespan - 1e-9
+
+
+def test_speed_lpt_rejects_bad_speed_vectors():
+    with pytest.raises(ValueError):
+        lpt_placement([1.0, 2.0], 2, speeds=[1.0])          # wrong len
+    with pytest.raises(ValueError):
+        lpt_placement([1.0, 2.0], 2, speeds=[1.0, 0.0])     # nonpositive
+    with pytest.raises(ValueError):
+        Placement(assignment=[[0], [1]], loads=[1.0, 1.0],
+                  speeds=[1.0, -2.0])
+
+
+def test_grouped_lpt_carries_speeds():
+    groups = [[0, 1], [2], [3, 4]]
+    pl = grouped_lpt_placement(groups, [2.0, 1.0, 1.0], 2,
+                               speeds=[1.0, 2.0])
+    assert pl.speeds == [1.0, 2.0]
+    placed = sorted(m for slot in pl.assignment for m in slot)
+    assert placed == list(range(5))
+
+
+# ------------------------------------------- bugfix regression: imbalance
+def test_imbalance_counts_stranded_slots():
+    """REGRESSION (pre-fix: imbalance averaged over nonzero slots only,
+    so a plan leaving a device fully idle reported 1.0 — 'perfectly
+    balanced' — and the controller's RE-PLACE trigger could never fire
+    on it)."""
+    stranded = Placement(assignment=[[0, 1], []], loads=[3.0, 0.0])
+    assert stranded.imbalance == pytest.approx(2.0)
+    # well above the controller's default imbalance_high=1.25 gate
+    assert stranded.imbalance > 1.25
+    balanced = Placement(assignment=[[0], [1]], loads=[1.0, 1.0])
+    assert balanced.imbalance == pytest.approx(1.0)
+    assert Placement(assignment=[[]], loads=[0.0]).imbalance == 0.0
+
+
+def test_imbalance_is_finish_time_weighted():
+    """Equal LOADS on unequal devices are imbalanced: the slow device
+    finishes late.  max(1.0, 0.25) / mean = 1.0 / 0.625 = 1.6."""
+    pl = Placement(assignment=[[0], [1]], loads=[1.0, 1.0],
+                   speeds=[1.0, 4.0])
+    assert pl.finish_times == pytest.approx([1.0, 0.25])
+    assert pl.imbalance == pytest.approx(1.6)
+    assert pl.makespan == pytest.approx(1.0)
+
+
+def test_finish_imbalance_helper():
+    assert finish_imbalance([1.0, 0.0, 0.0, 0.0]) == pytest.approx(4.0)
+    assert finish_imbalance([2.0, 2.0]) == pytest.approx(1.0)
+    assert finish_imbalance([]) == 0.0
+    assert finish_imbalance([0.0, 0.0]) == 0.0
+
+
 def test_placement_signature_distinguishes_plans():
     a = Placement(assignment=[[0, 1], [2]], loads=[2.0, 1.0])
     b = Placement(assignment=[[0], [1, 2]], loads=[1.0, 2.0])
@@ -141,6 +302,34 @@ def test_placement_signature_distinguishes_plans():
     assert a.signature() == c.signature()
     assert placement_signature(None) not in (a.signature(),
                                              b.signature())
+
+
+def test_signature_ignores_speeds():
+    """Speeds are planner input, not actuated state: a re-speeded but
+    identically-assigned plan must hit the same staging-cache entry
+    (no recompile churn when only the speed estimate moves)."""
+    a = Placement(assignment=[[0, 1], [2]], loads=[2.0, 1.0])
+    b = Placement(assignment=[[0, 1], [2]], loads=[2.0, 1.0],
+                  speeds=[1.0, 4.0])
+    assert a.signature() == b.signature()
+
+
+def test_failover_placement_keeps_survivor_speeds():
+    """Quarantining a device must preserve the SURVIVORS' speed
+    sub-vector, and the orphaned members land on the least-FINISH-TIME
+    survivor (the least-loaded slot may be the slowest device)."""
+    from repro.control.swap import HotSwapper
+    old = Placement(assignment=[[0], [1], [2]], loads=[1.0, 1.0, 1.2],
+                    speeds=[1.0, 1.0, 4.0])
+    pl = HotSwapper._failover_placement(old, 1)
+    assert pl.speeds == [1.0, 4.0]
+    # slot 1 (speed 4, finish 0.3) absorbs, not slot 0 (finish 1.0)
+    assert pl.assignment == [[0], [2, 1]]
+    assert pl.loads == pytest.approx([1.0, 2.2])
+    # homogeneous plans stay speed-free
+    pl0 = HotSwapper._failover_placement(
+        Placement(assignment=[[0], [1]], loads=[1.0, 2.0]), 0)
+    assert pl0.speeds is None
 
 
 # ------------------------------------------- sharded-serving equivalence
@@ -339,6 +528,215 @@ def test_re_place_noop_when_plan_unchanged(zoo_members):
     assert sw.re_place() is False         # same signature: no swap
     assert sw.facade.current is svc
     assert sw.facade.swap_count == 0
+
+
+@multi_device
+@needs_devices
+@pytest.mark.parametrize("speeds", [(4.0, 2.0, 1.0, 1.0),
+                                    (1.0, 1.0, 4.0, 0.5)])
+@pytest.mark.parametrize("rung", ["mid", "full"])
+def test_sharded_hetero_speeds_bitwise(zoo_members, batch, references,
+                                       rung, speeds):
+    """Speeds move work, never change math: for NON-UNIFORM synthetic
+    speed vectors the speed-aware sharded service stays bitwise-equal
+    to the single-device oracle, and the aware plan's finish-time
+    makespan never exceeds the speed-blind plan's under the true
+    speeds."""
+    sel, want_batch, want_one = references[rung]
+    idx = np.flatnonzero(np.asarray(sel, bool))
+    groups = list(bucket_zoo([zoo_members[i].spec for i in idx]).values())
+    costs = [float(len(g) + 0.25 * j) for j, g in enumerate(groups)]
+    pl = grouped_lpt_placement(groups, costs, len(speeds),
+                               speeds=list(speeds))
+    blind = grouped_lpt_placement(groups, costs, len(speeds))
+    blind_true = Placement(assignment=blind.assignment,
+                           loads=blind.loads, speeds=list(speeds))
+    assert pl.makespan <= blind_true.makespan + 1e-9
+    svc = EnsembleService.for_selector(
+        zoo_members, sel, placement=pl,
+        devices=jax.devices()[:len(speeds)])
+    got = np.asarray(svc.predict_batch(batch))
+    want = np.asarray(want_batch)
+    assert got.dtype == want.dtype
+    assert np.array_equal(got, want)
+    assert svc.predict(batch[0]) == want_one
+
+
+@multi_device
+@needs_devices
+def test_quarantine_drops_dead_device_speed(zoo_members):
+    """Device loss on a heterogeneous pool: the swapper's speed vector
+    loses the dead device's entry, and the failover plan carries the
+    survivor speed sub-vector."""
+    from repro.control.swap import HotSwapper
+    n = len(zoo_members)
+    sel = _ladder(n)["mid"]
+    devs = jax.devices()[:2]
+    sw = HotSwapper(zoo_members, sel, warmup_batch_sizes=(1,),
+                    n_devices=2, devices=devs, speeds=[1.0, 3.0],
+                    plan_batch=1, cost_reps=1)
+    assert sw.active_placement is not None
+    assert sw.active_placement.speeds == [1.0, 3.0]
+    assert sw.quarantine_device(devs[0])
+    assert sw.speeds == [3.0]
+    assert sw.active_placement.speeds == [3.0]
+    assert sw.active_placement.n_slots == 1
+
+
+@multi_device
+@needs_devices
+def test_retire_drift_feeds_replace(zoo_members, rng):
+    """ISSUE 9 acceptance lane: an injected per-device slowdown drifts
+    the live shard retire EWMAs; the controller sees the measured
+    finish-time imbalance, fires RE-PLACE, and ``re_place`` re-derives
+    the plan FROM THE DRIFT (live costs, not a fresh offline
+    measurement on the healthy reference device) — landing a plan that
+    splits the slowed device's buckets, without dropping a query."""
+    from repro.control.controller import ControllerConfig, Decision
+    from repro.control.faults import wire_controller
+    from repro.control.swap import HotSwapper
+    from repro.control.telemetry import SloTelemetry
+    from repro.serving.server import EnsembleServer
+
+    n = len(zoo_members)
+    sel = _ladder(n)["full"]
+    groups = list(bucket_zoo([m.spec for m in zoo_members]).values())
+    assert len(groups) >= 4
+    g_costs = [1.0, 1.0] + [0.5] * (len(groups) - 2)
+    pl_init = grouped_lpt_placement(groups, g_costs, 2)
+    devs = jax.devices()[:2]
+    sw = HotSwapper(zoo_members, sel, warmup_batch_sizes=(1,),
+                    n_devices=2, devices=devs,
+                    placement_fn=lambda s: pl_init)
+    # hand planning back to the measured/drift path: placement_fn only
+    # pinned a deterministic INITIAL plan for the scenario
+    sw.placement_fn = None
+    assert placement_signature(sw.active_placement) \
+        == pl_init.signature()
+    slow_dev = devs[0]
+    slow_keys = {tuple(sorted(b.idx))
+                 for b in sw.facade.current._buckets
+                 if b.device is slow_dev}
+    assert len(slow_keys) >= 2            # a co-resident pair to split
+
+    def guard(dev):
+        if dev is slow_dev:
+            time.sleep(0.02)              # the injected slowdown
+
+    sw.service_hook = lambda svc: setattr(svc, "dispatch_guard", guard)
+    sw.facade.current.dispatch_guard = guard
+
+    tel = SloTelemetry(slo_seconds=2.0, window_seconds=60.0)
+    ctl = wire_controller(
+        tel, sw, member_costs=[0.01] * n,
+        config=ControllerConfig(slo_seconds=2.0, cooldown_seconds=0.0,
+                                min_samples=5),
+        sync=True, start=False)
+    srv = EnsembleServer(batch_handler=sw.facade.predict_batch,
+                         n_workers=2, max_batch=1, max_wait_ms=0.5,
+                         telemetry=tel).start()
+    windows = [{"ecg": rng.standard_normal((3, 250)).astype(np.float32)}
+               for _ in range(24)]
+    for i in range(12):                   # drift phase
+        assert srv.submit(i, windows[i])
+    deadline = time.monotonic() + 30.0
+    while srv.stats.served < 12 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert srv.stats.served == 12
+    # the live EWMAs must already show the slowdown on slot 0's buckets
+    live = sw.facade.current.live_bucket_costs()
+    assert live is not None
+    fin = sw.facade.current.measured_finish_times()
+    assert fin is not None and fin[0] > 3.0 * max(fin[1], 1e-9)
+    assert ctl.step() is Decision.REPLACE
+    new_pl = sw.active_placement
+    assert placement_signature(new_pl) != pl_init.signature()
+    # the formerly co-resident slowed buckets are now split: no slot
+    # hosts every one of them
+    for slot in new_pl.assignment:
+        keys_on_slot = set()
+        for b in sw.facade.current._buckets:
+            if set(b.idx) <= set(slot):
+                keys_on_slot.add(tuple(sorted(b.idx)))
+        assert not slow_keys <= keys_on_slot
+    for i in range(12, 24):               # rebalanced phase
+        assert srv.submit(i, windows[i])
+    stats = srv.stop()
+    assert stats.served == 24             # zero dropped
+    assert stats.failed == 0
+
+
+# ---------------------------- bugfix regression: plan at the flush rung
+def test_plan_placement_measures_at_flush_rung(zoo_members):
+    """REGRESSION (pre-fix: ``plan_placement`` measured bucket costs at
+    batch=1 and took no ``batch=`` at all, while serving flushes pad to
+    the pow2 rung ladder — cost RATIOS differ between the two, so the
+    derived plan could be wrong for the traffic it serves).  With
+    synthetic batch-dependent timings the batch-1 plan and the
+    flush-rung plan genuinely flip, and the default must be the
+    flush-rung one."""
+    svc = EnsembleService(zoo_members)
+    groups = list(bucket_zoo([m.spec for m in zoo_members]).values())
+    n = len(groups)
+    assert n >= 3
+    # batch 1: fixed dispatch overhead dominates -> bucket 0 looks
+    # heaviest; at the flush rung the compute-heavy rest dominate
+    fake = {1: [0.4] + [0.1] * (n - 1),
+            PLAN_BATCH: [0.1] + [0.4] * (n - 1)}
+    svc.measured_bucket_costs = \
+        lambda reps=3, batch=1, warmup=1: list(fake[batch])
+    plan_default = svc.plan_placement(2)
+    plan_flush = svc.plan_placement(2, batch=PLAN_BATCH)
+    plan_b1 = svc.plan_placement(2, batch=1)
+    assert plan_b1.signature() != plan_flush.signature()   # plans flip
+    assert plan_default.signature() == plan_flush.signature()
+
+
+# ------------------------------------------- live shard retire EWMAs
+def test_flush_records_shard_retire_ewmas(zoo_members, batch):
+    """Every fused flush folds per-shard dispatch->retire wall-clock
+    into an O(1) EWMA; the snapshot covers every bucket, the live cost
+    vector lines up with the planner's groups, and state never grows
+    with the number of flushes."""
+    svc = EnsembleService.for_selector(zoo_members,
+                                       _ladder(len(zoo_members))["full"])
+    svc.warmup(batch_sizes=(8,))      # keep compile out of the EWMAs
+    assert svc.shard_cost_snapshot() == {}
+    assert svc.live_bucket_costs() is None       # nothing observed yet
+    for _ in range(3):
+        svc.predict_batch(batch)
+    snap = svc.shard_cost_snapshot()
+    groups = list(bucket_zoo([m.spec for m in zoo_members]).values())
+    assert set(snap) == {tuple(sorted(g)) for g in groups}
+    assert all(v > 0 for v in snap.values())
+    live = svc.live_bucket_costs()
+    assert live is not None and len(live) == len(groups)
+    fin = svc.measured_finish_times()
+    assert fin is not None and len(fin) == 1     # unsharded: one slot
+    assert fin[0] == pytest.approx(max(snap.values()))
+    svc.predict_batch(batch)
+    assert len(svc.shard_cost_snapshot()) == len(snap)   # O(1) state
+
+
+def test_retire_ewma_tracks_injected_slowdown(zoo_members, batch):
+    """A dispatch_guard stall on the (single) device shows up in the
+    retire EWMAs within a few flushes — the drift signal RE-PLACE
+    consumes."""
+    svc = EnsembleService.for_selector(zoo_members,
+                                       _ladder(len(zoo_members))["full"])
+    svc.warmup(batch_sizes=(8,))      # keep compile out of the EWMAs
+    for _ in range(3):
+        svc.predict_batch(batch)
+    fast = dict(svc.shard_cost_snapshot())
+    # 50ms stall: large vs per-shard compute, so every shard's EWMA
+    # must drift well past its fast baseline even though the stalls
+    # also absorb some cross-shard gather wait
+    svc.dispatch_guard = lambda dev: time.sleep(0.05)
+    for _ in range(5):
+        svc.predict_batch(batch)
+    slow = svc.shard_cost_snapshot()
+    assert set(slow) == set(fast)
+    assert all(slow[k] > fast[k] + 0.01 for k in fast)
 
 
 # ------------------------------------------------- subprocess lane

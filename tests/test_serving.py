@@ -15,7 +15,8 @@ from repro.serving.aggregator import (AggState, ModalitySpec,
 from repro.serving.latency import (LatencyProfiler, arrival_curve,
                                    max_horizontal_distance, queueing_bound,
                                    service_curve)
-from repro.serving.placement import lpt_placement, plan_pod_ensemble
+from repro.serving.placement import (Placement, lpt_placement,
+                                     plan_pod_ensemble)
 from repro.serving.queues import TimestampedQueue
 from repro.serving.simulator import SimConfig, simulate
 
@@ -185,3 +186,46 @@ def test_latency_profiler_unstable_queue():
                                   window_seconds=1.0),
         cost_fn=lambda i: 0.01)
     assert prof(np.asarray([1, 1, 1, 1])) >= prof.infeasible_latency
+
+
+def test_latency_profiler_call_threads_active_placement():
+    """REGRESSION: ``__call__`` used to compute T_s from a FRESH LPT
+    plan even when the caller held the ACTIVE placement — e.g. the
+    deliberately unbalanced interim plan installed by failover — so the
+    estimate understated latency exactly when the controller's risk
+    prediction mattered most.  Pre-fix this call raised TypeError
+    (no ``placement=`` parameter)."""
+    cfg = SystemConfig(n_devices=2, n_patients=4, window_seconds=10.0)
+    prof = LatencyProfiler(_tiny_zoo(), cfg,
+                           cost_fn=lambda i: 0.01 * (i + 1))
+    b = np.asarray([1, 1, 1, 1])
+    skewed = Placement(assignment=[[0, 1, 2, 3], []], loads=[0.1, 0.0])
+    assert prof.serving_latency(b, placement=skewed) \
+        > prof.serving_latency(b)
+    assert prof(b, placement=skewed) > prof(b)
+
+
+def test_latency_profiler_hetero_speeds():
+    """Heterogeneous pool: mu = sum(speeds)/sum(costs), and a
+    speed-aware T_s plan beats the homogeneous one when one device is
+    4x faster.  Unit speeds reduce to the default exactly."""
+    cfg = SystemConfig(n_devices=2, n_patients=4, window_seconds=10.0)
+    cost = lambda i: 0.1 * (i + 1)                      # noqa: E731
+    b = np.asarray([1, 1, 1, 1])
+    base = LatencyProfiler(_tiny_zoo(), cfg, cost_fn=cost)
+    fast = LatencyProfiler(_tiny_zoo(), cfg, cost_fn=cost,
+                           device_speeds=[1.0, 4.0])
+    unit = LatencyProfiler(_tiny_zoo(), cfg, cost_fn=cost,
+                           device_speeds=[1.0, 1.0])
+    assert base.throughput(b) == pytest.approx(2.0 / 1.0)
+    assert fast.throughput(b) == pytest.approx(5.0 / 1.0)
+    assert fast.serving_latency(b) < base.serving_latency(b)
+    assert unit.serving_latency(b) == base.serving_latency(b)
+    assert unit.throughput(b) == base.throughput(b)
+
+
+def test_latency_profiler_rejects_bad_speed_length():
+    prof = LatencyProfiler(_tiny_zoo(), SystemConfig(n_devices=2),
+                           device_speeds=[1.0])
+    with pytest.raises(ValueError):
+        prof.throughput(np.asarray([1, 0, 0, 0]))
