@@ -30,6 +30,22 @@ survivors, run in a subprocess under
 
 ``--smoke`` is the CI tier1-chaos entry: tiny trace, fixed seed and
 schedule, both lanes, schema-gated, writes nothing.
+
+The SLOT lane (``BENCH_chaos.json["slots"]``) soaks the continuous
+slot engine instead of the flush path: a compressed-time MIMIC-style
+cohort trace (each driver step is ``step_logical_s`` of ICU time, so
+minutes of wall clock replay tens of logical hours of census churn —
+Poisson admissions through ``SlotEngine.acquire_slot`` growing the
+census past its initial ``n_slots``, lognormal length-of-stay
+discharges, escalated beds closing windows faster than stable ones)
+under ``slot_compound_schedule`` (a ticker-stall cascade the
+``TickerWatchdog`` must respawn through, plus overlapping device
+losses inside a backpressure episode).  Its bitwise oracle is the
+TICK REPORT: every ``(slot, close-version, pad-rung)`` a tick ever
+stamped is re-scored offline by an unsharded fault-free
+``EnsembleService`` at exactly that pad rung, and every REAL score a
+query served must be one of its slot's stamped scores — a fault can
+delay a tick or NaN a read, never alter a score.
 """
 from __future__ import annotations
 
@@ -408,6 +424,386 @@ def run_chaos(n_patients: int = 6, windows_per_patient: int = 10,
     return out
 
 
+# ------------------------------------------------- slot-engine lane
+SLOT_LANE_KEYS = (
+    "n_devices", "seed", "slo_s", "slot_wait_s", "ticker_deadline_s",
+    "schedule", "trace", "n_slots_initial", "n_slots_final",
+    "spad_final", "submitted", "ring_rejected", "served", "served_real",
+    "failed", "rejected", "ticks", "tick_skips", "tick_faults",
+    "tick_aborts", "rebinds", "ticker_respawns", "watchdog_events",
+    "grows", "admits", "discharges", "stale_ticks", "quarantined",
+    "recoveries", "controller", "faults", "p50_ms", "p99_ms",
+    "conservation_ok", "bitwise_ok", "n_bitwise_checked",
+    "recovery_ok", "no_leaked_threads", "leaked_threads",
+)
+SLOT_FAULT_KINDS_REQUIRED = ("device_loss", "ticker_stall",
+                             "backpressure")
+
+
+def run_slot_chaos(n_beds: int = 5, n_steps: int = 240,
+                   step_wall_s: float = 0.05,
+                   step_logical_s: float = 120.0,
+                   input_len: int = 250, n_devices: int = 1,
+                   seed: int = 0, slo: float = 2.0,
+                   slot_wait: float = 0.5,
+                   ticker_deadline: float = 0.35,
+                   tick_interval: float = 0.02,
+                   max_queue: int = 32,
+                   lam_admit: float = 0.05,
+                   los_median_steps: float = 60.0,
+                   recovery_slo_s: Optional[float] = None,
+                   schedule=None, verbose: bool = True) -> Dict:
+    """One slot-engine soak lane (see module doc).  The driver clock is
+    COMPRESSED: each step is ``step_logical_s`` of ICU time but only
+    ``step_wall_s`` of wall clock, so a default full run replays
+    ``n_steps * step_logical_s / 3600`` logical hours of cohort churn
+    in under a minute.  Returns the result dict (SLOT_LANE_KEYS)."""
+    import jax
+
+    if recovery_slo_s is None:
+        # recovery here is queue-drain bound: queries queued during an
+        # outage each burn up to ``slot_wait`` before NaN-retiring, and
+        # a permanent loss additionally restages + rebinds (the moved
+        # buckets recompile) before fresh ticks can stamp real scores
+        recovery_slo_s = 45.0 if n_devices >= 2 else 15.0
+
+    from repro.configs.ecg_zoo import ECG_LEADS, zoo_specs
+    from repro.control.faults import (FaultPlane, slot_compound_schedule,
+                                      wire_controller)
+    from repro.control.swap import HotSwapper
+    from repro.control.telemetry import SloTelemetry
+    from repro.models.ecg_resnext import init_ecg
+    from repro.obs.spans import SpanRecorder
+    from repro.serving.aggregator import DeviceIngest, ModalitySpec
+    from repro.serving.pipeline import EnsembleService, ZooMember
+    from repro.serving.server import EnsembleServer
+    from repro.serving.slots import SlotEngine, TickLadder
+
+    n_devices = min(n_devices, jax.device_count())
+    rng = np.random.default_rng(seed)
+    specs = zoo_specs(reduced=True, input_len=input_len)
+    pool = [ZooMember(s, init_ecg(jax.random.PRNGKey(i), s))
+            for i, s in enumerate(specs)]
+    rich = np.ones(len(pool), np.int8)
+
+    swapper = HotSwapper(pool, rich, n_devices=n_devices,
+                         warmup_batch_sizes=(8,))
+    # single-rung MEMBER ladder: a controller shed falls through to the
+    # aux TickLadder (freshness degrades before accuracy) and a
+    # failover restage keeps the composition rebind-compatible
+    swapper.set_ladder([rich])
+    telemetry = SloTelemetry(slo_seconds=slo, window_seconds=3.0)
+
+    di = DeviceIngest([ModalitySpec("ecg", float(input_len), ECG_LEADS)],
+                      n_beds, window_seconds=1.0, capacity_windows=4.0)
+    eng = SlotEngine(swapper.facade.current, di)
+    # respawned ticker generations skip a held tick lock FAST, so they
+    # beat well inside the watchdog deadline during a long failover
+    # (no respawn pile-up behind a recovering tick)
+    eng.tick_lock_timeout = 0.2
+    n_slots_initial = eng.n_slots
+
+    tracer = SpanRecorder()
+    srv = EnsembleServer(engine="slots", slot_engine=eng, n_workers=4,
+                         slo_seconds=slo, max_queue=max_queue,
+                         tick_interval=tick_interval,
+                         slot_wait_timeout=slot_wait,
+                         ticker_deadline_seconds=ticker_deadline,
+                         telemetry=telemetry, tracer=tracer)
+    ladder = TickLadder(srv.ticker,
+                        intervals=(4 * tick_interval, 2 * tick_interval,
+                                   tick_interval))
+    ctl = wire_controller(telemetry, swapper, aux_ladder=ladder,
+                          period_seconds=0.2)
+
+    schedule = schedule if schedule is not None \
+        else slot_compound_schedule(n_devices, seed=seed)
+    plane = FaultPlane(schedule, seed=seed)
+
+    # the tick-report oracle log: every (slot, close-version, pad-rung)
+    # a tick ever STAMPED, with its combined score.  The same key must
+    # score identically every time it is stamped (same window, same
+    # members — placement is bitwise-irrelevant even across a rebind).
+    rec: Dict[tuple, float] = {}
+    rec_lock = threading.Lock()
+    restamp_consistent = [True]
+
+    def on_tick(r):
+        if r.stamped is None or not len(r.stamped):
+            return
+        with rec_lock:
+            for s, v, sc in zip(r.stamped, r.versions, r.scores):
+                key = (int(s), int(v), int(r.spad))
+                prev = rec.get(key)
+                if prev is None:
+                    rec[key] = float(sc)
+                elif prev != float(sc):
+                    restamp_consistent[0] = False
+
+    eng.on_tick = on_tick
+
+    eng.warm()
+    # pre-warm the NEXT pad rung too: the census provably outgrows its
+    # initial slots mid-soak, and the bucket recompile at the grown
+    # rung should not masquerade as fault-recovery latency
+    swapper.facade.current.warmup(
+        batch_sizes=(2 * eng._Spad,))
+    srv.start()
+    # arm AFTER warmup (schedule clock starts with traffic), then wire
+    # tick-path recovery: ticker-stall injection, device-loss
+    # quarantine + TickLadder shed + rebind, flush-quarantine rebinds
+    plane.arm(swapper)
+    plane.protect_engine(eng, swapper, ticker=srv.ticker,
+                         tick_ladder=ladder)
+
+    # ------------------------------------------------ cohort trace
+    beds: Dict[int, Dict] = {}          # slot -> bed state
+    row_t: Dict[int, float] = {}        # slot -> ring close clock (kept
+    #                                     across occupants: ring time is
+    #                                     monotonic per ROW, not per bed)
+    verc: Dict[int, int] = {}           # slot -> close version counter
+    snaps: Dict[tuple, np.ndarray] = {}  # (slot, version) -> ecg window
+    zero_win = np.zeros((ECG_LEADS, input_len), np.float32)
+    qid = 0
+    submitted = 0
+    ring_rejected = 0
+    n_admissions = 0
+
+    def admit_bed(step: int) -> None:
+        nonlocal n_admissions
+        slot = eng.acquire_slot()       # lowest free, grows the census
+        esc = bool(rng.random() < 0.25)
+        los = max(3, int(rng.lognormal(np.log(los_median_steps), 0.5)))
+        beds[slot] = {"esc": esc, "period": 1 if esc else 4,
+                      "next": step + 1, "until": step + los}
+        n_admissions += 1
+
+    def close_and_submit(slot: int, fresh: bool = True) -> None:
+        """One closed observation window -> one slot query.  The window
+        is snapshotted AT CLOSE keyed by (slot, close version) — what a
+        timely tick gathers — for the tick-report oracle.  ``fresh=
+        False`` (the flood path) re-closes an unchanged ring: valid=0,
+        the gather yields the all-zeros dropout window."""
+        nonlocal qid, submitted
+        t_row = row_t.get(slot, 0.0)
+        if fresh:
+            sig = rng.standard_normal(
+                (ECG_LEADS, input_len)).astype(np.float32)
+            di.ingest(t_row, slot, "ecg", sig)
+            t_row += 1.0
+            row_t[slot] = t_row
+        ref = di.close_window(slot, t_row, extra={"qid": qid})
+        qid += 1
+        v = verc.get(slot, 0) + 1       # mirrors SlotEngine's close
+        verc[slot] = v                  # version (one update per close)
+        if all(x == 0 for x in ref.valid.values()):
+            snaps[(slot, v)] = zero_win
+        else:
+            snaps[(slot, v)] = ref.host_window("ecg")
+        submitted += 1
+        srv.submit(slot, ref)
+
+    def maybe_flood() -> None:
+        """During a backpressure episode, overrun the bounded queue
+        with re-closes of unchanged rings (cheap degenerate queries the
+        oracle rescores like any other) — the ShedQueue must shed."""
+        targets = [s for s in beds if s in row_t]
+        if not plane.backpressure_active() or not targets:
+            return
+        # one invocation must overrun the queue BY ITSELF: the episode
+        # can overlap as little as one driver step when a compile pause
+        # stretches the step it lands on
+        for _ in range(max(2, (2 * max_queue + 8) // len(targets))):
+            for s in targets:
+                close_and_submit(s, fresh=False)
+
+    fault_recovery: Dict[int, Optional[float]] = {
+        i: None for i in range(len(schedule))}
+
+    def check_recoveries() -> None:
+        t_now = plane.now()
+        for i, ev in enumerate(schedule):
+            if fault_recovery[i] is not None:
+                continue
+            end = ev.t + ev.duration
+            if t_now <= end + 0.05:
+                continue
+            snap = telemetry.snapshot(
+                since=plane._armed_at + end + slot_wait)
+            if snap.n_served - snap.n_failed >= 2 and snap.p99 <= slo:
+                fault_recovery[i] = t_now - end
+
+    for _ in range(n_beds):
+        admit_bed(0)
+
+    for step in range(n_steps):
+        for slot in [s for s, b in beds.items() if b["until"] <= step]:
+            eng.discharge(slot)
+            del beds[slot]
+        # Poisson arrivals, plus a deterministic two-bed escalation
+        # wing early on so the census provably outgrows n_slots on
+        # every seed
+        n_new = int(rng.poisson(lam_admit)) + (2 if step == 5 else 0)
+        for _ in range(n_new):
+            admit_bed(step)
+        for slot, b in list(beds.items()):
+            if step >= b["next"]:
+                if di.headroom(slot) < 1.0:
+                    ring_rejected += 1
+                else:
+                    close_and_submit(slot)
+                b["next"] = step + b["period"]
+        maybe_flood()
+        check_recoveries()
+        time.sleep(step_wall_s)
+
+    # keep a light pulse flowing until the schedule has fully fired
+    # and every fault's recovery window is measured
+    t_wait = time.monotonic() + recovery_slo_s + 2.0
+    while (not plane.done()
+           or any(v is None for v in fault_recovery.values())) \
+            and time.monotonic() < t_wait:
+        if not beds:
+            admit_bed(n_steps)
+        for slot in list(beds)[:2]:
+            if srv.q.qsize() >= max(2, max_queue // 2):
+                break       # polite pulse: must not re-trigger shedding
+            if di.headroom(slot) < 1.0:
+                ring_rejected += 1
+                continue
+            close_and_submit(slot)
+        maybe_flood()
+        check_recoveries()
+        time.sleep(step_wall_s)
+
+    srv.drain(timeout=30.0)
+    check_recoveries()
+    stats = srv.stop()
+    ctl_ok = ctl.stop()
+    leaked = sorted({t.name for t in threading.enumerate()
+                     if t.is_alive() and t.name.startswith("repro-")})
+
+    # ---------------------------------------------------- invariants
+    results = []
+    while True:
+        batch = srv.results()
+        if not batch:
+            break
+        results.extend(batch)
+    n_real = sum(1 for _, s, _, _ in results if s == s)
+    n_nan = sum(1 for _, s, _, _ in results if s != s)
+    conservation_ok = (stats.served + stats.shed == submitted
+                       and len(results) == stats.served
+                       and n_real + n_nan == stats.served
+                       and n_nan == stats.failed)
+
+    # tick-report oracle: re-score every stamped (slot, version) with
+    # an UNSHARDED fault-free service in batches of exactly the pad
+    # rung the tick dispatched at (bucket rows are independent, so
+    # zero-window pad rows cannot perturb the real rows)
+    oracle = EnsembleService(pool)
+    bitwise_ok = restamp_consistent[0]
+    n_checked = 0
+    with rec_lock:
+        entries = sorted(rec.items())
+    by_spad: Dict[int, List] = {}
+    for (s, v, spad), sc in entries:
+        by_spad.setdefault(spad, []).append((s, v, sc))
+    for spad, ents in sorted(by_spad.items()):
+        for i in range(0, len(ents), spad):
+            chunk = ents[i:i + spad]
+            wins = []
+            for s, v, _sc in chunk:
+                w = snaps.get((s, v))
+                if w is None:           # stamped a version the driver
+                    bitwise_ok = False  # never closed: impossible
+                    w = zero_win
+                wins.append(w)
+            while len(wins) < spad:
+                wins.append(zero_win)
+            want = oracle.predict_batch([{"ecg": w} for w in wins])
+            for (s, v, sc), wsc in zip(chunk, want):
+                bitwise_ok = bitwise_ok and (sc == wsc)
+                n_checked += 1
+
+    # ...and every REAL score a query served must be one of its slot's
+    # stamped scores (reads come from the mirror, the mirror only ever
+    # holds stamped ticks — NaN-or-stale during gaps, never invented)
+    slot_scores: Dict[int, set] = {}
+    for (s, _v, _spad), sc in entries:
+        slot_scores.setdefault(s, set()).add(sc)
+    for patient, score, _lat, _ref in results:
+        if score == score and score not in slot_scores.get(patient, ()):
+            bitwise_ok = False
+
+    recovery_s = [fault_recovery[i] for i in range(len(schedule))]
+    recovery_ok = all(r is not None and r <= recovery_slo_s
+                      for r in recovery_s)
+    no_leaked = (not leaked) and (not srv.leaked) and ctl_ok
+
+    out = {
+        "n_devices": n_devices, "seed": seed, "slo_s": slo,
+        "slot_wait_s": slot_wait, "ticker_deadline_s": ticker_deadline,
+        "schedule": [ev.to_dict() for ev in schedule],
+        "trace": {
+            "n_beds": n_beds, "n_steps": n_steps,
+            "step_wall_s": step_wall_s,
+            "step_logical_s": step_logical_s,
+            "sim_hours": round(n_steps * step_logical_s / 3600.0, 2),
+            "compression": round(step_logical_s / step_wall_s, 1),
+            "lam_admit": lam_admit,
+            "los_median_steps": los_median_steps,
+            "admissions": n_admissions},
+        "n_slots_initial": n_slots_initial,
+        "n_slots_final": eng.n_slots, "spad_final": eng._Spad,
+        "submitted": submitted, "ring_rejected": ring_rejected,
+        "served": stats.served, "served_real": n_real,
+        "failed": stats.failed, "rejected": stats.shed,
+        "ticks": eng.tick_count, "tick_skips": eng.n_tick_skips,
+        "tick_faults": eng.n_tick_faults,
+        "tick_aborts": eng.n_tick_aborts, "rebinds": eng.n_rebinds,
+        "ticker_respawns": srv.ticker.n_respawns,
+        "watchdog_events": list(srv.ticker_watchdog.events),
+        "grows": eng.n_grows, "admits": eng.n_admits,
+        "discharges": eng.n_discharges,
+        "stale_ticks": eng.n_stale_total,
+        "quarantined": [str(d) for d in swapper.quarantined],
+        "recoveries": plane.recoveries,
+        "controller": {
+            "actions": [[round(t, 3), d.name] for t, d in ctl.log],
+            "n_recomposes": ctl.n_recomposes},
+        "faults": [{**ev.to_dict(), "recovery_s": recovery_s[i]}
+                   for i, ev in enumerate(schedule)],
+        "p50_ms": stats.p(50) * 1e3, "p99_ms": stats.p(99) * 1e3,
+        "conservation_ok": bool(conservation_ok),
+        "bitwise_ok": bool(bitwise_ok), "n_bitwise_checked": n_checked,
+        "recovery_ok": bool(recovery_ok),
+        "no_leaked_threads": bool(no_leaked),
+        "leaked_threads": leaked + list(srv.leaked)
+        + list(ctl.leaked),
+    }
+    att = tracer.attribution()
+    out["obs"] = {"n_spans": att["n_spans"],
+                  "by_status": att["by_status"],
+                  "coverage": round(att["coverage"], 4)}
+    if verbose:
+        print(f"\nslot chaos soak ({n_devices} device(s), "
+              f"{out['trace']['sim_hours']}h logical / "
+              f"{n_steps * step_wall_s:.0f}s wall):")
+        print(f"  submitted {submitted}  real {n_real}  failed "
+              f"{stats.failed}  rejected {stats.shed}  slots "
+              f"{n_slots_initial}->{eng.n_slots}  ticks "
+              f"{eng.tick_count} (faults {eng.n_tick_faults} aborts "
+              f"{eng.n_tick_aborts})  respawns "
+              f"{srv.ticker.n_respawns}  rebinds {eng.n_rebinds}  "
+              f"quarantined {out['quarantined']}")
+        print(f"  conservation {conservation_ok}  bitwise {bitwise_ok} "
+              f"({n_checked} checked)  recovery {recovery_ok} "
+              f"{[None if r is None else round(r, 2) for r in recovery_s]}"
+              f"  no_leaked_threads {no_leaked}")
+    return out
+
+
 # ------------------------------------------------------------- schema
 def check_chaos_schema(lane: Dict) -> None:
     """Gate one lane's result: every tracked key present, all four
@@ -428,9 +824,33 @@ def check_chaos_schema(lane: Dict) -> None:
         "a critical query was rejected"
 
 
+def check_slot_lane_schema(lane: Dict) -> None:
+    """Gate one slot-engine lane: every tracked key, all four
+    invariants, the compound fault kinds actually scheduled, and the
+    chaos machinery provably EXERCISED (watchdog respawned, ticks
+    faulted, census grew past its initial slots, queue shed)."""
+    for k in SLOT_LANE_KEYS:
+        assert k in lane, f"missing slot lane key: {k}"
+    kinds = {ev["kind"] for ev in lane["schedule"]}
+    for k in SLOT_FAULT_KINDS_REQUIRED:
+        assert k in kinds, f"slot schedule missing fault kind {k}"
+    for inv in ("conservation_ok", "bitwise_ok", "recovery_ok",
+                "no_leaked_threads"):
+        assert lane[inv] is True, f"slot invariant failed: {inv} ({lane})"
+    assert lane["n_bitwise_checked"] > 0, "slot oracle checked nothing"
+    assert lane["ticker_respawns"] >= 1, \
+        "ticker watchdog never respawned through the stall cascade"
+    assert lane["tick_faults"] >= 1, \
+        "no tick ever hit an injected device loss"
+    assert lane["grows"] >= 1 \
+        and lane["n_slots_final"] > lane["n_slots_initial"], \
+        "census never outgrew the initial slot count"
+    assert lane["rejected"] >= 1, "backpressure never shed anything"
+
+
 def check_chaos_file(path: str = BENCH_JSON) -> None:
-    """CI gate on the committed BENCH_chaos.json: both lanes present
-    and individually valid."""
+    """CI gate on the committed BENCH_chaos.json: flush lanes AND slot
+    lanes present and individually valid."""
     with open(path) as f:
         data = json.load(f)
     for lane_name in ("single_device", "forced_8_device"):
@@ -439,15 +859,28 @@ def check_chaos_file(path: str = BENCH_JSON) -> None:
     assert data["forced_8_device"]["n_devices"] >= 2
     assert data["forced_8_device"]["quarantined"], \
         "multi-device lane never quarantined the lost device"
+    assert "slots" in data, "missing slot-engine lanes"
+    for lane_name in ("single_device", "forced_8_device"):
+        assert lane_name in data["slots"], \
+            f"missing slot lane {lane_name}"
+        check_slot_lane_schema(data["slots"][lane_name])
+    s8 = data["slots"]["forced_8_device"]
+    assert s8["n_devices"] >= 2, "slot lane ran single-device"
+    assert s8["quarantined"], \
+        "slot lane never quarantined the lost device"
+    assert s8["rebinds"] >= 1, \
+        "slot engine never rebound onto the survivor facade"
     print(f"chaos schema OK ({path})")
 
 
 # ----------------------------------------------------- lane dispatch
 def _subprocess_lane(n_patients: int, windows: int,
-                     seed: int = 0) -> Dict:
-    """Run the forced-8-device lane in a subprocess (XLA device count
-    is fixed at jax init, so the multi-device lane needs its own
-    process)."""
+                     seed: int = 0, lane: str = "flush") -> Dict:
+    """Run a forced-8-device lane in a subprocess (XLA device count is
+    fixed at jax init, so the multi-device lanes need their own
+    process).  ``lane`` picks the flush soak or the slot-engine soak;
+    for the slot lane ``n_patients``/``windows`` mean initial beds /
+    driver steps."""
     import tempfile
     env = dict(os.environ)
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
@@ -460,7 +893,7 @@ def _subprocess_lane(n_patients: int, windows: int,
     try:
         r = subprocess.run(
             [sys.executable, os.path.abspath(__file__), "--emit",
-             out_path, "--devices", str(N_FORCED),
+             out_path, "--lane", lane, "--devices", str(N_FORCED),
              "--n-patients", str(n_patients),
              "--windows", str(windows), "--seed", str(seed)],
             cwd=repo, env=env, capture_output=True, text=True,
@@ -494,17 +927,30 @@ if __name__ == "__main__":
     ap.add_argument("--emit", default=None,
                     help="run ONE lane in this process and write its "
                          "result dict to this path (subprocess entry)")
+    ap.add_argument("--lane", choices=("flush", "slots"),
+                    default="flush",
+                    help="which soak --emit runs (flush path or the "
+                         "continuous slot engine)")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--n-patients", type=int, default=None)
     ap.add_argument("--windows", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    SLOT_SMOKE_STEPS = 150
+    SLOT_FULL_STEPS = 900
+
     if args.emit:
-        out = run_chaos(n_patients=args.n_patients or 6,
-                        windows_per_patient=args.windows or 10,
-                        n_devices=args.devices, seed=args.seed)
-        check_chaos_schema(out)
+        if args.lane == "slots":
+            out = run_slot_chaos(n_beds=args.n_patients or 5,
+                                 n_steps=args.windows or SLOT_FULL_STEPS,
+                                 n_devices=args.devices, seed=args.seed)
+            check_slot_lane_schema(out)
+        else:
+            out = run_chaos(n_patients=args.n_patients or 6,
+                            windows_per_patient=args.windows or 10,
+                            n_devices=args.devices, seed=args.seed)
+            check_chaos_schema(out)
         with open(args.emit, "w") as f:
             json.dump(out, f, indent=2)
     elif args.smoke:
@@ -516,7 +962,16 @@ if __name__ == "__main__":
                                  args.windows or 8, seed=args.seed)
         check_chaos_schema(lane8)
         assert lane8["n_devices"] >= 2 and lane8["quarantined"]
-        print("chaos smoke OK (single-device + forced-8-device lanes)")
+        slane1 = run_slot_chaos(n_steps=SLOT_SMOKE_STEPS,
+                                n_devices=1, seed=args.seed)
+        check_slot_lane_schema(slane1)
+        slane8 = _subprocess_lane(5, SLOT_SMOKE_STEPS, seed=args.seed,
+                                  lane="slots")
+        check_slot_lane_schema(slane8)
+        assert slane8["n_devices"] >= 2 and slane8["quarantined"] \
+            and slane8["rebinds"] >= 1
+        print("chaos smoke OK (flush + slot lanes, single-device + "
+              "forced-8-device)")
     else:
         lane1 = run_chaos(n_patients=args.n_patients or 6,
                           windows_per_patient=args.windows or 10,
@@ -525,6 +980,25 @@ if __name__ == "__main__":
         lane8 = _subprocess_lane(args.n_patients or 6,
                                  args.windows or 10, seed=args.seed)
         check_chaos_schema(lane8)
+        slane1 = run_slot_chaos(n_steps=SLOT_FULL_STEPS, n_devices=1,
+                                seed=args.seed)
+        check_slot_lane_schema(slane1)
+        slane8 = _subprocess_lane(5, SLOT_FULL_STEPS, seed=args.seed,
+                                  lane="slots")
+        check_slot_lane_schema(slane8)
+        # the committed, replayable fault traces the soaks survived
+        # (FaultPlane.to_json / from_json round-trips these)
+        from repro.control.faults import (FaultPlane,
+                                          slot_compound_schedule)
+        tdir = os.path.join(os.path.dirname(__file__), "traces")
+        os.makedirs(tdir, exist_ok=True)
+        for nd, fname in ((1, "slot_compound_1dev.json"),
+                          (N_FORCED, "slot_compound_8dev.json")):
+            FaultPlane(slot_compound_schedule(nd, seed=args.seed),
+                       seed=args.seed).to_json(
+                os.path.join(tdir, fname))
         _merge_bench_json({"single_device": lane1,
-                           "forced_8_device": lane8})
+                           "forced_8_device": lane8,
+                           "slots": {"single_device": slane1,
+                                     "forced_8_device": slane8}})
         check_chaos_file()

@@ -94,13 +94,21 @@ class AdaptiveController:
                  service_profile_fn: Optional[
                      Callable[[], Tuple[float, float]]] = None,
                  sync: bool = False,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 aux_ladder=None):
         """``service_profile_fn`` returns (mu, T_s) — optionally
         (mu, T_s, placement_imbalance) — of the ACTIVE ensemble so
         snapshots carry the online T_q bound and the live device-load
-        balance."""
+        balance.
+
+        ``aux_ladder`` is an optional SECOND, cheaper degradation
+        ladder (e.g. ``serving.slots.TickLadder`` — tick rate): SHED
+        walks it down before touching the member ladder, CLIMB
+        restores members first and the aux ladder last (LIFO undo), so
+        freshness degrades before accuracy and recovers after it."""
         self.telemetry = telemetry
         self.swapper = swapper
+        self.aux_ladder = aux_ladder
         self.recompose_fn = recompose_fn
         # placement is actuatable only when the swapper exposes the
         # RE-PLACE actuator (HotSwapper does; plain ladders do not)
@@ -164,7 +172,7 @@ class AdaptiveController:
             return Decision.HOLD
         if (snap.violation_rate >= c.violation_high
                 or snap.p99 > c.slo_seconds or snap.n_shed > 0):
-            return Decision.SHED if self.swapper.can_shed() \
+            return Decision.SHED if self._can_shed_any() \
                 else Decision.RECOMPOSE
         if self._can_replace \
                 and np.isfinite(snap.placement_imbalance) \
@@ -181,9 +189,35 @@ class AdaptiveController:
                 return Decision.RECOMPOSE      # load drifted: re-search
         if (snap.violation_rate <= c.violation_low
                 and snap.p99 <= c.headroom_frac * c.slo_seconds
-                and self.swapper.can_climb()):
+                and self._can_climb_any()):
             return Decision.CLIMB
         return Decision.HOLD
+
+    def _can_shed_any(self) -> bool:
+        aux = self.aux_ladder
+        return self.swapper.can_shed() \
+            or (aux is not None and aux.can_shed())
+
+    def _can_climb_any(self) -> bool:
+        aux = self.aux_ladder
+        return self.swapper.can_climb() \
+            or (aux is not None and aux.can_climb())
+
+    def _shed_once(self) -> bool:
+        """Aux ladder (freshness) sheds before the member ladder
+        (accuracy)."""
+        aux = self.aux_ladder
+        if aux is not None and aux.can_shed() and aux.shed():
+            return True
+        return self.swapper.shed()
+
+    def _climb_once(self) -> bool:
+        """Members climb back before the aux ladder — LIFO undo of
+        ``_shed_once``."""
+        if self.swapper.can_climb() and self.swapper.climb():
+            return True
+        aux = self.aux_ladder
+        return aux is not None and aux.climb()
 
     # ------------------------------------------------------------- act
     def snapshot(self, now: Optional[float] = None) -> TelemetrySnapshot:
@@ -213,11 +247,11 @@ class AdaptiveController:
         decision = self.decide(snap)
         acted = False
         if decision is Decision.SHED:
-            acted = self.swapper.shed()
+            acted = self._shed_once()
             # find the right ensemble for the new load in the background
             acted = self._launch_recompose(snap) or acted
         elif decision is Decision.CLIMB:
-            acted = self.swapper.climb()
+            acted = self._climb_once()
         elif decision is Decision.RECOMPOSE:
             acted = self._launch_recompose(snap)
         elif decision is Decision.REPLACE:

@@ -33,12 +33,29 @@ Fault kinds and their recovery contracts:
   bounded ``ShedQueue`` + priority-aware admission shed the stable tier
   first, counting every rejection in ``ServerStats``.
 
-Everything is driven by an injectable monotonic clock relative to
-``arm()`` time, so the same schedule replays identically run to run.
+* ``ticker_stall`` — the slot-engine analogue of ``worker_stall``: the
+  ``SlotTicker``'s ``before_tick`` hook (wired by ``protect_engine``)
+  consumes a token and sleeps it out WITHOUT heart-beating, so the
+  ``TickerWatchdog`` must detect the quiet beat and respawn the ticker;
+  readers ride the gap on the tick-age guard (NaN-or-stale, never a
+  wrong score).
+
+``protect()`` guards the flush/worker path; ``protect_engine()`` is the
+same contract for the continuous slot path — every tick gather and
+bucket dispatch runs behind ``guard``, a loss aborts the tick BEFORE
+the donated fold, and recovery (quarantine + engine rebind, optionally
+shedding the ``TickLadder`` while shards recompile) re-ticks onto the
+survivor placement.
+
+Everything is driven by an injectable MONOTONIC clock relative to
+``arm()`` time (wall-clock steps must never shear event timing in long
+soaks), so the same schedule replays identically run to run; schedules
+round-trip through ``to_json``/``from_json`` as committed trace files.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
 import threading
 import time
@@ -48,7 +65,8 @@ import numpy as np
 
 log = logging.getLogger(__name__)
 
-FAULT_KINDS = ("device_loss", "worker_stall", "backpressure")
+FAULT_KINDS = ("device_loss", "worker_stall", "backpressure",
+               "ticker_stall")
 
 
 class DeviceLostError(RuntimeError):
@@ -110,6 +128,7 @@ class FaultPlane:
         self._pending: List[FaultEvent] = list(self.schedule)
         self._lost: Dict[int, FaultEvent] = {}     # device idx -> event
         self._stalls: List[FaultEvent] = []        # unconsumed stall tokens
+        self._ticker_stalls: List[FaultEvent] = []  # ticker stall tokens
         self._bp: List[FaultEvent] = []            # backpressure episodes
         self.devices: List = []
         self.fired: List[Tuple[float, FaultEvent]] = []
@@ -141,6 +160,9 @@ class FaultPlane:
         svc.dispatch_guard = self.guard
 
     def now(self) -> float:
+        """Seconds since ``arm()`` on the plane's MONOTONIC clock —
+        never wall time, so a host clock step cannot shear a schedule
+        mid-soak."""
         if self._armed_at is None:
             raise RuntimeError("FaultPlane not armed")
         return self.clock() - self._armed_at
@@ -148,7 +170,9 @@ class FaultPlane:
     # ------------------------------------------------------------- firing
     def _tick(self) -> None:
         with self._lock:
-            t = self.now()
+            if self._armed_at is None:
+                return          # pre-arm probe (e.g. a ticker hook
+            t = self.now()      # wired before the schedule starts)
             while self._pending and self._pending[0].t <= t:
                 ev = self._pending.pop(0)
                 self.fired.append((t, ev))
@@ -157,6 +181,8 @@ class FaultPlane:
                     self._lost[ev.target] = ev
                 elif ev.kind == "worker_stall":
                     self._stalls.append(ev)
+                elif ev.kind == "ticker_stall":
+                    self._ticker_stalls.append(ev)
                 else:
                     self._bp.append(ev)
             # transient losses expire on their own (the device "reboots")
@@ -190,11 +216,25 @@ class FaultPlane:
                 return self._stalls.pop(0).duration
         return 0.0
 
+    def ticker_stall_pending(self) -> float:
+        """Consume one due ticker-stall token; returns the stall
+        duration (0.0 when none due).  This IS the ``SlotTicker``'s
+        ``before_tick`` hook (wired by ``protect_engine``), so it is
+        safe to call before ``arm()`` — the ticker usually starts
+        first."""
+        self._tick()
+        with self._lock:
+            if self._ticker_stalls:
+                return self._ticker_stalls.pop(0).duration
+        return 0.0
+
     def backpressure_active(self) -> bool:
         """True while a backpressure episode is in progress — the trace
         driver's cue to overrun the ingest side."""
         self._tick()
         with self._lock:
+            if self._armed_at is None:
+                return False
             t = self.now()
             return any(ev.t <= t < ev.t + max(ev.duration, 1e-9)
                        for ev in self._bp)
@@ -278,14 +318,16 @@ class FaultPlane:
             if dur > 0:
                 log.info("injected worker stall: %.3fs", dur)
                 time.sleep(dur)       # silent: the watchdog MUST fire
-            t_give_up = time.monotonic() + retry_budget_s
+            # the retry budget runs on the plane's injectable MONOTONIC
+            # clock — same timeline as the schedule, immune to wall steps
+            t_give_up = self.clock() + retry_budget_s
             last_err = None
             while True:
                 try:
                     return score_fn(windows, *rest)
                 except DeviceLostError as e:
                     last_err = e
-                    if time.monotonic() >= t_give_up or not beat():
+                    if self.clock() >= t_give_up or not beat():
                         raise last_err  # budget gone / co-batch already
                     #                     abandoned: NaN-isolation path
                     ev = self.active_losses().get(e.index)
@@ -297,12 +339,159 @@ class FaultPlane:
 
         return guarded
 
+    def protect_engine(self, engine, swapper=None, ticker=None,
+                       tick_ladder=None,
+                       retry_sleep: float = 0.02) -> "FaultPlane":
+        """Extend injection + recovery into the continuous slot path —
+        the tick-side sibling of ``protect()``:
+
+        * ``ticker.before_tick`` consumes ticker-stall tokens (the
+          stall sleeps in the ticker loop without beating, so the
+          ``TickerWatchdog`` must catch it);
+        * ``engine.on_device_lost`` becomes the tick recovery hook: a
+          PERMANENT loss on a sharded pool sheds the ``TickLadder``
+          one rung (cheaper ticks while the moved shards recompile —
+          undone right after), quarantines the device through the
+          shared one-thread-per-index ``_failover`` path, rebinds the
+          engine onto the survivor facade and returns True so the
+          aborted tick re-runs; a TRANSIENT loss returns False — the
+          tick aborts clean and the next tick retries once the device
+          reboots;
+        * the swapper's ``quarantine_hooks`` gain a rebind request, so
+          a FLUSH-path quarantine (both engines live on one pool) also
+          re-points the slot engine — lazily, at its next tick, since
+          a hook firing mid-tick must not deadlock on the tick lock.
+        """
+        swapper = swapper if swapper is not None else self.swapper
+        if ticker is not None:
+            ticker.before_tick = self.ticker_stall_pending
+
+        def _recover(err: DeviceLostError) -> bool:
+            ev = self.active_losses().get(err.index)
+            permanent = ev is not None and ev.duration == 0
+            if not permanent or swapper is None:
+                return False
+            shed = tick_ladder is not None and tick_ladder.shed()
+            try:
+                self._failover(err, swapper, beat=lambda: True,
+                               retry_sleep=retry_sleep)
+            finally:
+                if shed:
+                    tick_ladder.climb()
+            if err.device in getattr(swapper, "quarantined", []):
+                engine.rebind(swapper.facade.current)
+                return True
+            return False
+
+        engine.on_device_lost = _recover
+        hooks = getattr(swapper, "quarantine_hooks", None)
+        if hooks is not None:
+            hooks.append(lambda device, svc: engine.request_rebind(svc))
+        return self
+
+    # -------------------------------------------------------- trace files
+    def to_json(self, path: Optional[str] = None) -> str:
+        """Serialize the SCHEDULE (not runtime state) as a replayable
+        trace: committed alongside the bench results, it pins exactly
+        which faults a soak survived."""
+        payload = {"version": 1, "seed": self.seed,
+                   "schedule": [ev.to_dict() for ev in self.schedule]}
+        text = json.dumps(payload, indent=2) + "\n"
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_json(cls, src,
+                  clock: Callable[[], float] = time.monotonic
+                  ) -> "FaultPlane":
+        """Rebuild a plane from ``to_json`` output — accepts the
+        parsed dict, the JSON text, or a path to a trace file."""
+        if isinstance(src, dict):
+            payload = src
+        else:
+            text = str(src)
+            if not text.lstrip().startswith("{"):
+                with open(text) as f:
+                    text = f.read()
+            payload = json.loads(text)
+        events = [FaultEvent(t=float(ev["t"]), kind=str(ev["kind"]),
+                             target=int(ev.get("target", 0)),
+                             duration=float(ev.get("duration", 0.0)))
+                  for ev in payload.get("schedule", [])]
+        return cls(events, seed=int(payload.get("seed", 0)),
+                   clock=clock)
+
+
+# ------------------------------------------------- compound schedules
+def compound_schedule(n_devices: int, seed: int = 0,
+                      t0: float = 0.45) -> List[FaultEvent]:
+    """Flush-path compound schedule: overlapping device losses, a loss
+    DURING a backpressure episode, and a worker-stall cascade.
+    Deterministic in (n_devices, seed) — the seed jitters timings,
+    never the shape."""
+    rng = np.random.default_rng(seed)
+
+    def j(hi: float = 0.05) -> float:
+        return float(rng.uniform(0.0, hi))
+
+    ev = [FaultEvent(t0 + j(), "worker_stall", duration=0.6),
+          FaultEvent(t0 + 0.1 + j(), "worker_stall", duration=0.5)]
+    bp = t0 + 0.9 + j()
+    ev.append(FaultEvent(bp, "backpressure", duration=0.6))
+    if n_devices >= 2:
+        # permanent loss inside the backpressure episode, with a
+        # transient loss of a SECOND device overlapping the quarantine
+        ev.append(FaultEvent(bp + 0.15 + j(), "device_loss", target=1))
+        ev.append(FaultEvent(bp + 0.2 + j(), "device_loss",
+                             target=2 if n_devices > 2 else 0,
+                             duration=0.5))
+    else:
+        ev.append(FaultEvent(bp + 0.15 + j(), "device_loss", target=0,
+                             duration=0.35))
+        ev.append(FaultEvent(bp + 0.85 + j(), "device_loss", target=0,
+                             duration=0.25))
+    return sorted(ev, key=lambda e: e.t)
+
+
+def slot_compound_schedule(n_devices: int, seed: int = 0,
+                           t0: float = 0.45) -> List[FaultEvent]:
+    """Slot-engine compound schedule: a ticker-stall cascade (the
+    watchdog must respawn through BOTH stalls), then overlapping
+    device losses during a backpressure episode.  No ``worker_stall``
+    — the slot path's server workers only wait on versions; the stall
+    surface is the ticker itself."""
+    rng = np.random.default_rng(seed)
+
+    def j(hi: float = 0.05) -> float:
+        return float(rng.uniform(0.0, hi))
+
+    ev = [FaultEvent(t0 + j(), "ticker_stall", duration=0.7),
+          FaultEvent(t0 + 0.1 + j(), "ticker_stall", duration=0.5)]
+    bp = t0 + 1.1 + j()
+    ev.append(FaultEvent(bp, "backpressure", duration=0.6))
+    if n_devices >= 2:
+        ev.append(FaultEvent(bp + 0.15 + j(), "device_loss", target=1))
+        ev.append(FaultEvent(bp + 0.2 + j(), "device_loss",
+                             target=2 if n_devices > 2 else 0,
+                             duration=0.5))
+    else:
+        # single device: transient losses are the only recoverable
+        # shape — one inside backpressure, one after
+        ev.append(FaultEvent(bp + 0.15 + j(), "device_loss", target=0,
+                             duration=0.35))
+        ev.append(FaultEvent(bp + 0.85 + j(), "device_loss", target=0,
+                             duration=0.25))
+    return sorted(ev, key=lambda e: e.t)
+
 
 def wire_controller(telemetry, swapper, member_costs=None,
                     config=None, recompose_fn=None,
                     period_seconds: float = 0.25, sync: bool = False,
                     start: bool = True, exporter=None,
-                    on_step: Optional[Callable] = None):
+                    on_step: Optional[Callable] = None,
+                    aux_ladder=None):
     """Run an ``AdaptiveController`` against a REAL ``EnsembleServer``:
     the server taps ``telemetry`` (pass the same object to
     ``EnsembleServer(telemetry=...)``), and the returned controller's
@@ -326,6 +515,12 @@ def wire_controller(telemetry, swapper, member_costs=None,
     returned controller so scrapes see live decision counters;
     ``on_step(decision)`` is invoked after every control iteration —
     the hook benches use to dump metrics on actuation.
+
+    ``aux_ladder`` (a ``serving.slots.TickLadder``) adds tick RATE as
+    a cheaper first degradation rung: the controller sheds the aux
+    ladder before members and climbs members before the aux ladder
+    (LIFO undo), so a pressured slot engine slows its ticks before it
+    thins its ensemble.
     """
     from repro.control.controller import AdaptiveController
 
@@ -357,7 +552,7 @@ def wire_controller(telemetry, swapper, member_costs=None,
 
     ctl = AdaptiveController(telemetry, swapper, recompose_fn=recompose_fn,
                              config=config, service_profile_fn=profile_fn,
-                             sync=sync)
+                             sync=sync, aux_ladder=aux_ladder)
     if exporter is not None:
         # scrapes read the live controller/telemetry from now on
         exporter.controller = ctl

@@ -45,12 +45,15 @@ through novel pairs can never evict tier B's live service.
 """
 from __future__ import annotations
 
+import logging
 import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.serving.placement import Placement, placement_signature
+
+log = logging.getLogger(__name__)
 
 
 class StagingCache:
@@ -242,6 +245,13 @@ class HotSwapper(SelectorLadder):
         self.service_hook: Optional[Callable] = None
         self.quarantined: List = []        # devices removed by fault recovery
         self._devices_gen = 0              # bumped by quarantine_device
+        # called as hook(device, svc) AFTER a successful quarantine
+        # swap, with the survivor facade's new service — the seam a
+        # SlotEngine (which holds a direct service ref, not the
+        # facade) uses to learn about flush-path failovers.  Hooks may
+        # run on the failover thread; they must not block on locks the
+        # triggering dispatch path might hold.
+        self.quarantine_hooks: List[Callable] = []
         self.vitals_model = vitals_model
         self.labs_model = labs_model
         self.warmup_batch_sizes = tuple(warmup_batch_sizes)
@@ -560,6 +570,11 @@ class HotSwapper(SelectorLadder):
             self.active_placement = pl
             self._staging.pin(self, self._skey(sel, pl))
         self.quarantined.append(device)
+        for hook in list(self.quarantine_hooks):
+            try:
+                hook(device, svc)
+            except Exception:
+                log.exception("quarantine hook failed")
         return True
 
     def _evict_stale(self, active: np.ndarray) -> None:

@@ -297,6 +297,29 @@ class DeviceIngest:
             self.mark[m.name] = np.zeros(n_patients, np.int64)
         self.window_start: List[Optional[float]] = [None] * n_patients
 
+    def grow(self, n_patients: int) -> None:
+        """Grow the census to ``n_patients`` ring rows (no-op when
+        already large enough).  Each modality's ring is replaced by a
+        zero-padded copy along the patient axis — a FUNCTIONAL update,
+        so an in-flight flush's snapshot of the old (smaller) state
+        stays valid, exactly like ``ingest``'s replacement contract.
+        Existing rows keep their samples and window accounting bitwise;
+        new rows start empty.  Like ``ingest``, growth assumes a single
+        feeding thread per modality (the ``SlotEngine`` serializes its
+        growth against live ticks separately)."""
+        if n_patients <= self.n_patients:
+            return
+        add = n_patients - self.n_patients
+        for name, st in self.states.items():
+            self.states[name] = AggState(
+                buf=jnp.pad(st.buf, ((0, add), (0, 0), (0, 0))),
+                write_idx=jnp.pad(st.write_idx, (0, add)),
+                total=jnp.pad(st.total, (0, add)))
+            self.fed[name] = np.pad(self.fed[name], (0, add))
+            self.mark[name] = np.pad(self.mark[name], (0, add))
+        self.window_start.extend([None] * add)
+        self.n_patients = n_patients
+
     def ingest(self, t: float, patient: int, modality: str,
                samples: np.ndarray) -> None:
         samples = np.atleast_2d(np.asarray(samples, np.float32))

@@ -221,7 +221,8 @@ class EnsembleServer:
                  engine: str = "flush",
                  slot_engine=None,
                  tick_interval: float = 0.02,
-                 slot_wait_timeout: Optional[float] = None):
+                 slot_wait_timeout: Optional[float] = None,
+                 ticker_deadline_seconds: Optional[float] = None):
         if engine not in ("flush", "slots"):
             raise ValueError(f"unknown engine {engine!r}")
         if engine == "slots":
@@ -248,9 +249,19 @@ class EnsembleServer:
                            if slot_wait_timeout is not None
                            else max(1.0, 10.0 * tick_interval))
         self.ticker = None
+        self.ticker_watchdog = None
         if engine == "slots":
-            from repro.serving.slots import SlotTicker
+            from repro.serving.slots import SlotTicker, TickerWatchdog
             self.ticker = SlotTicker(slot_engine, interval=tick_interval)
+            if ticker_deadline_seconds is not None:
+                # heartbeat watchdog: a dead or stalled ticker is
+                # respawned; readers ride the gap on the tick-age
+                # guard / wait timeout (NaN-or-stale, never wrong)
+                self.ticker_watchdog = TickerWatchdog(
+                    self.ticker, deadline_seconds=ticker_deadline_seconds)
+        elif ticker_deadline_seconds is not None:
+            raise ValueError('ticker_deadline_seconds needs '
+                             'engine="slots"')
         self.handler = handler
         self.batch_handler = batch_handler
         self.slo = slo_seconds
@@ -319,6 +330,8 @@ class EnsembleServer:
             self._watchdog.start()
         if self.ticker is not None:
             self.ticker.start()
+        if self.ticker_watchdog is not None:
+            self.ticker_watchdog.start()
         return self
 
     def _tier_and_priority(self, patient: int):
@@ -647,8 +660,14 @@ class EnsembleServer:
         for t in threads:
             t.join(timeout=join_timeout)
         self.leaked = [t.name for t in threads if t.is_alive()]
+        if self.ticker_watchdog is not None:
+            # the watchdog stops FIRST so it cannot respawn a ticker
+            # generation behind the ticker join below
+            if not self.ticker_watchdog.stop(join_timeout):
+                self.leaked.append(self.ticker_watchdog.name)
         if self.ticker is not None and not self.ticker.stop(join_timeout):
-            self.leaked.append(self.ticker.name)
+            # every generation a respawn ever left behind is accounted
+            self.leaked.extend(self.ticker.alive_threads())
         if self.leaked:
             log.warning("server stop(): threads still alive: %s",
                         self.leaked)

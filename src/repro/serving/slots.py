@@ -84,6 +84,22 @@ log = logging.getLogger(__name__)
 warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable")
 
+_DEVICE_LOST_CLS = None
+
+
+def _device_lost(e: BaseException) -> bool:
+    """True when ``e`` is the fault plane's ``DeviceLostError``.  Lazily
+    imported so the serving layer never depends on ``repro.control`` at
+    import time (the control plane already imports serving)."""
+    global _DEVICE_LOST_CLS
+    if _DEVICE_LOST_CLS is None:
+        try:
+            from repro.control.faults import DeviceLostError
+            _DEVICE_LOST_CLS = DeviceLostError
+        except Exception:               # control plane absent: nothing
+            return False                # can raise its error type
+    return isinstance(e, _DEVICE_LOST_CLS)
+
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _masked_update(prev: jax.Array, cands: Tuple[jax.Array, ...],
@@ -118,12 +134,23 @@ class _Group:
 
 @dataclasses.dataclass
 class TickReport:
-    """What one ``tick()`` did (the bench/telemetry surface)."""
+    """What one ``tick()`` did (the bench/telemetry surface).
+
+    ``stamped``/``versions``/``scores`` name the slots whose mirror
+    actually ADVANCED this tick (the ABA/version guards can drop a
+    computed score), aligned index-for-index — together with ``spad``
+    (the pad rung the tick dispatched at) they are exactly what an
+    offline oracle needs to re-score the tick bitwise."""
     tick: int                       # tick ordinal after this tick
     n_scored: int                   # occupied slots scored this tick
     n_stale: int                    # occupied slots skipped (ring overrun)
     seconds: float                  # wall clock of the whole tick
     scored: np.ndarray              # slot ids scored this tick
+    stamped: Optional[np.ndarray] = None   # slot ids whose mirror advanced
+    versions: Optional[np.ndarray] = None  # close version per stamped slot
+    scores: Optional[np.ndarray] = None    # combined score per stamped slot
+    spad: int = 0                   # pad rung (oracle batch size)
+    skipped: bool = False           # tick-lock timeout: nothing ran
 
 
 class SlotEngine:
@@ -161,26 +188,30 @@ class SlotEngine:
         self._Spad = pow2_rung(self.n_slots)
         self._lens = tuple(sorted({b.spec.input_len
                                    for b in service._buckets}))
-        # device groups in bucket-plan order (one per shard device)
-        groups: Dict[object, _Group] = {}
-        for b in service._buckets:
-            g = groups.get(b.device)
-            if g is None:
-                g = _Group(device=b.device, buckets=[],
-                           rows=np.zeros(0, np.int64), state=None)
-                groups[b.device] = g
-            g.buckets.append(b)
-        for g in groups.values():
-            g.rows = np.asarray([i for b in g.buckets for i in b.idx])
-            state = jnp.zeros((len(g.rows), self._Spad), jnp.float32)
-            g.state = (jax.device_put(state, g.device)
-                       if g.device is not None else state)
-        self.groups: List[_Group] = list(groups.values())
+        self.groups: List[_Group] = self._build_groups(service)
         # [Spad] f32 combined (zoo-mean) score vector, stays on device
         self.device_scores: Optional[jax.Array] = None
         self._pj = jnp.asarray(
             np.pad(np.arange(self.n_slots, dtype=np.int32),
                    (0, self._Spad - self.n_slots)))
+
+        # ---- tick serialization + fault recovery ----
+        # one tick (or growth, or rebind) at a time; REENTRANT so the
+        # device-loss hook may rebind from inside a failing tick.  A
+        # respawned ticker generation that finds the lock held (a
+        # zombie tick still in flight) SKIPS rather than piling up.
+        self._tick_lock = threading.RLock()
+        self.tick_lock_timeout = 2.0
+        self.max_tick_retries = 3
+        # on_device_lost(err) -> bool: installed by the fault plane
+        # (``FaultPlane.protect_engine``); True means "recovered, re-run
+        # the tick", False/None means abort (the error propagates and
+        # the NEXT tick retries naturally — right for transient losses)
+        self.on_device_lost = None
+        self.on_tick = None             # on_tick(TickReport), post-tick
+        self._pre_stamp_hook = None     # test seam: runs between the
+        #                                 readback and the stamp lock
+        self._pending_rebind = None     # service queued by request_rebind
 
         # ---- host slot state (all guarded by _lock) ----
         self._lock = threading.Lock()
@@ -204,15 +235,147 @@ class SlotEngine:
         self.n_discharges = 0
         self.n_stale_total = 0
         self.tick_seconds = 0.0
+        self.n_tick_faults = 0       # DeviceLostError raised inside a tick
+        self.n_tick_aborts = 0       # ticks abandoned (fault, no recovery)
+        self.n_tick_skips = 0        # ticks skipped on the tick lock
+        self.n_rebinds = 0           # post-failover service rebinds
+        self.n_grows = 0             # census regrowths (ensure_slots)
+
+    def _build_groups(self, service) -> List[_Group]:
+        """Device groups in bucket-plan order (one per shard device),
+        each with a ZERO member-score state at the current pad rung."""
+        groups: Dict[object, _Group] = {}
+        for b in service._buckets:
+            g = groups.get(b.device)
+            if g is None:
+                g = _Group(device=b.device, buckets=[],
+                           rows=np.zeros(0, np.int64), state=None)
+                groups[b.device] = g
+            g.buckets.append(b)
+        for g in groups.values():
+            g.rows = np.asarray([i for b in g.buckets for i in b.idx])
+            state = jnp.zeros((len(g.rows), self._Spad), jnp.float32)
+            g.state = (jax.device_put(state, g.device)
+                       if g.device is not None else state)
+        return list(groups.values())
+
+    def rebind(self, service) -> None:
+        """Point the engine at a new ``EnsembleService`` — the
+        post-failover step: ``HotSwapper.quarantine_device`` re-stages
+        onto the survivor pool and swaps its facade, but the engine
+        holds a DIRECT service ref, so the fault plane (or a
+        quarantine hook) must rebind it.  Idempotent; the member
+        composition must be unchanged (failover moves shards, it never
+        drops members).  Group states restart at zero on the new
+        placement — every occupied slot is fully re-scored by the next
+        tick anyway, and the host mirror keeps its last good scores in
+        the gap (stale, never wrong)."""
+        if service is self.service:
+            return
+        if not getattr(service, "fused", False) or \
+                getattr(service, "marshal", "packed") != "packed":
+            raise ValueError("rebind needs a fused, packed "
+                             "EnsembleService")
+        old = [getattr(m, "name", None) for m in self.service.members]
+        new = [getattr(m, "name", None) for m in service.members]
+        if old != new:
+            raise ValueError(f"rebind must keep the member composition "
+                             f"({old} -> {new})")
+        with self._tick_lock:
+            self.service = service
+            self._lens = tuple(sorted({b.spec.input_len
+                                       for b in service._buckets}))
+            self.groups = self._build_groups(service)
+            self.device_scores = None
+            with self._lock:
+                self.n_rebinds += 1
+
+    def request_rebind(self, service) -> None:
+        """Queue a rebind to be applied at the next tick.  The async
+        form exists for ``HotSwapper.quarantine_hooks``: a hook can
+        fire on the failover thread WHILE a tick (waiting on that very
+        failover) holds the tick lock — a synchronous ``rebind`` there
+        would deadlock."""
+        with self._lock:
+            self._pending_rebind = service
 
     # ------------------------------------------------------ slot admin
     def admit(self, slot: int) -> None:
-        """Insert a bed into its slot (idempotent).  The slot serves
+        """Insert a bed into its slot (idempotent), growing the census
+        when ``slot`` is past the current capacity.  The slot serves
         NaN until its first window is closed and ticked."""
+        if slot >= self.n_slots:
+            self.ensure_slots(slot + 1)
         with self._lock:
             if self.occupied[slot]:
                 return
             self._admit_locked(slot)
+
+    def acquire_slot(self) -> int:
+        """Admit into the lowest FREE slot and return its id, growing
+        the census when every slot is occupied — the free-list admit
+        path for callers that track beds, not slot ids (a hospital
+        census scales past the initial ``n_slots`` this way)."""
+        while True:
+            with self._lock:
+                free = np.flatnonzero(~self.occupied)
+                if len(free):
+                    s = int(free[0])
+                    self._admit_locked(s)
+                    return s
+                want = self.n_slots + 1
+            self.ensure_slots(want)   # racers just re-loop
+
+    def ensure_slots(self, n: int) -> int:
+        """Grow the census to hold at least ``n`` slots, under live
+        ticks, and return the new capacity.  Growth goes in pow2 steps
+        (``pow2_rung``) so slot count and pad rung stay aligned and
+        regrowths amortize.  Serialized against ``tick()`` on the tick
+        lock: a tick in flight finishes on the OLD shapes (its
+        snapshot is consistent), the next one sees the grown census.
+        Existing slots keep their scores, versions and ring rows
+        bitwise; device group states are zero-padded along the slot
+        axis, which preserves every live column exactly."""
+        if n <= self.n_slots:
+            return self.n_slots
+        with self._tick_lock:
+            if n <= self.n_slots:     # lost the growth race: done
+                return self.n_slots
+            new_n = int(pow2_rung(n))
+            old_spad = self._Spad
+            new_spad = int(pow2_rung(new_n))
+            self.ingest.grow(new_n)
+            add = new_n - self.n_slots
+            with self._lock:
+                self.occupied = np.pad(self.occupied, (0, add))
+                self.has_window = np.pad(self.has_window, (0, add))
+                for m in list(self._ends):
+                    self._ends[m] = np.pad(self._ends[m], (0, add))
+                    self._valid[m] = np.pad(self._valid[m], (0, add))
+                self._extra.extend({} for _ in range(add))
+                self._close_version = np.pad(self._close_version,
+                                             (0, add))
+                self.scored_version = np.pad(
+                    self.scored_version, (0, add), constant_values=-1)
+                self.last_scored_tick = np.pad(
+                    self.last_scored_tick, (0, add), constant_values=-1)
+                self._admit_epoch = np.pad(self._admit_epoch, (0, add))
+                self.mirror = np.pad(self.mirror, (0, add),
+                                     constant_values=np.nan)
+                self.n_slots = new_n
+                self._Spad = new_spad
+                self.n_grows += 1
+            self._pj = jnp.asarray(
+                np.pad(np.arange(self.n_slots, dtype=np.int32),
+                       (0, self._Spad - self.n_slots)))
+            if new_spad != old_spad:
+                for g in self.groups:
+                    grown = jnp.pad(
+                        g.state, ((0, 0), (0, new_spad - old_spad)))
+                    g.state = (jax.device_put(grown, g.device)
+                               if g.device is not None else grown)
+                self.device_scores = None
+            return self.n_slots
 
     def _admit_locked(self, slot: int) -> None:
         self.occupied[slot] = True
@@ -249,6 +412,8 @@ class SlotEngine:
         if ref.ingest is not self.ingest:
             raise ValueError("ref belongs to a different DeviceIngest")
         s = ref.patient
+        if s >= self.n_slots:      # ingest grown out-of-band: catch up
+            self.ensure_slots(s + 1)
         with self._lock:
             if not self.occupied[s]:
                 self._admit_locked(s)
@@ -291,10 +456,72 @@ class SlotEngine:
         """Score every occupied, non-stale slot once: fused ring
         gathers + the flush path's cached stacked bucket dispatches +
         one donated masked-update step per device group, then refresh
-        the host mirror with the oracle-exact combined scores."""
+        the host mirror with the oracle-exact combined scores.
+
+        Fault contract: every gather and bucket dispatch runs behind
+        the fault plane's ``dispatch_guard``, and ALL guards fire
+        before the first donated ``_masked_update`` fold — a
+        ``DeviceLostError`` aborts the tick with every group's
+        persistent score state untouched (a partially-failed tick can
+        never be folded in).  When ``on_device_lost`` is installed and
+        recovers (quarantine + rebind), the tick re-runs on the
+        survivor placement; otherwise the error propagates and the
+        next tick retries — either way post-recovery scores are
+        bitwise the unsharded oracle's.  Concurrent ticks serialize on
+        the tick lock; a caller that cannot acquire it within
+        ``tick_lock_timeout`` returns a ``skipped`` report instead of
+        piling up behind a stalled zombie tick."""
+        if not self._tick_lock.acquire(timeout=self.tick_lock_timeout):
+            with self._lock:
+                self.n_tick_skips += 1
+                return TickReport(self.tick_count, 0, 0, 0.0,
+                                  np.zeros(0, np.int64),
+                                  spad=self._Spad, skipped=True)
+        try:
+            with self._lock:
+                pending = self._pending_rebind
+                self._pending_rebind = None
+            if pending is not None:
+                try:
+                    self.rebind(pending)    # reentrant on the tick lock
+                except Exception:
+                    log.exception("queued rebind failed")
+            attempts = 0
+            while True:
+                try:
+                    report = self._tick_attempt()
+                    break
+                except Exception as e:
+                    if not _device_lost(e):
+                        raise
+                    with self._lock:
+                        self.n_tick_faults += 1
+                    hook = self.on_device_lost
+                    attempts += 1
+                    if hook is not None \
+                            and attempts <= self.max_tick_retries \
+                            and hook(e):
+                        continue        # recovered: re-run the tick
+                    with self._lock:
+                        self.n_tick_aborts += 1
+                        self._cv.notify_all()
+                    raise
+        finally:
+            self._tick_lock.release()
+        cb = self.on_tick
+        if cb is not None:
+            try:
+                cb(report)
+            except Exception:
+                log.exception("on_tick callback failed")
+        return report
+
+    def _tick_attempt(self) -> TickReport:
         t0 = time.perf_counter()
         svc = self.service
         with self._lock:
+            spad = self._Spad
+            pj = self._pj
             occ = self.occupied & self.has_window
             ends = {m: a.copy() for m, a in self._ends.items()}
             valid = {m: a.copy() for m, a in self._valid.items()}
@@ -304,6 +531,7 @@ class SlotEngine:
         stale = self._stale_mask(occ, ends, valid)
         mask = occ & ~stale
         scored = np.flatnonzero(mask)
+        empty = np.zeros(0, np.int64)
         if not len(scored):
             with self._lock:
                 self.tick_count += 1
@@ -311,48 +539,30 @@ class SlotEngine:
                 self.tick_seconds += time.perf_counter() - t0
                 self._cv.notify_all()
                 return TickReport(self.tick_count, 0, int(stale.sum()),
-                                  time.perf_counter() - t0, scored)
+                                  time.perf_counter() - t0, scored,
+                                  stamped=empty, versions=empty,
+                                  scores=np.zeros(0), spad=spad)
+
+        # ---- phase 1: gather + dispatch.  No persistent state is
+        # touched and every guard fires HERE, so a DeviceLostError
+        # anywhere in this phase aborts with all group states intact.
+        guard = svc.dispatch_guard
+        if guard is not None:
+            guard(None)      # the ingest rings live on the default device
 
         # one fused gather per distinct window length, over ALL slots
         # (masked-out columns carry garbage and are dropped on device)
         st = self.ingest.states["ecg"]
         cap = st.buf.shape[-1]
-        pad = self._Spad - self.n_slots
+        pad = spad - self.n_slots
         ej = jnp.asarray(np.pad((ends["ecg"] % cap).astype(np.int32),
                                 (0, pad)))
         vj = jnp.asarray(np.pad(
             np.where(mask, valid["ecg"], 0).astype(np.int32), (0, pad)))
-        packs = {L: gather_windows(st.buf, self._pj, ej, vj, L)
+        packs = {L: gather_windows(st.buf, pj, ej, vj, L)
                  for L in self._lens}
         dev_wins, _ = svc._ship_packs(packs)    # D2D for remote shards
 
-        guard = svc.dispatch_guard
-        occ_dev = self._occ_device(mask)
-        n_disp = 0
-        combined = None
-        for g in self.groups:
-            cands = []
-            for b in g.buckets:
-                if guard is not None:
-                    guard(b.device)
-                cands.append(b.fn(
-                    b.stacked, dev_wins[(b.spec.input_len, b.device)]))
-            n_disp += len(g.buckets)
-            g.state, combined = _masked_update(
-                g.state, tuple(cands), occ_dev[g.device])
-        if len(self.groups) == 1:
-            self.device_scores = combined
-        else:
-            anchor = self.groups[0].device
-            self.device_scores = _fleet_mean(tuple(
-                jax.device_put(g.state, anchor) for g in self.groups))
-
-        # host mirror: exact _combine numerics (float64 mean over the
-        # member column + CPU-side vitals/labs models) from one small
-        # per-tick readback — this sync point plays the flush's gather
-        score_mat = np.zeros((len(svc.members), self._Spad))
-        for g in self.groups:
-            score_mat[g.rows] = np.asarray(jax.block_until_ready(g.state))
         vit_rows = None
         if svc.vitals_model is not None \
                 and "vitals" in self.ingest.states:
@@ -364,33 +574,78 @@ class SlotEngine:
                 np.where(mask, valid["vitals"], 0).astype(np.int32),
                 (0, pad)))
             vit_rows = np.asarray(gather_windows(
-                vst.buf, self._pj, vej, vvj,
-                self.ingest.want["vitals"]))
+                vst.buf, pj, vej, vvj, self.ingest.want["vitals"]))
+
+        occ_dev = self._occ_device(mask)
+        group_cands: List[Tuple[jax.Array, ...]] = []
+        n_disp = 0
+        for g in self.groups:
+            cands = []
+            for b in g.buckets:
+                if guard is not None:
+                    guard(b.device)
+                cands.append(b.fn(
+                    b.stacked, dev_wins[(b.spec.input_len, b.device)]))
+            n_disp += len(g.buckets)
+            group_cands.append(tuple(cands))
+
+        # ---- phase 2: fold.  Every guard has passed; the donated
+        # updates commit each group's state for this tick.
+        combined = None
+        for g, cands in zip(self.groups, group_cands):
+            g.state, combined = _masked_update(
+                g.state, cands, occ_dev[g.device])
+        if len(self.groups) == 1:
+            self.device_scores = combined
+        else:
+            anchor = self.groups[0].device
+            self.device_scores = _fleet_mean(tuple(
+                jax.device_put(g.state, anchor) for g in self.groups))
+
+        # host mirror: exact _combine numerics (float64 mean over the
+        # member column + CPU-side vitals/labs models) from one small
+        # per-tick readback — this sync point plays the flush's gather
+        score_mat = np.zeros((len(svc.members), spad))
+        for g in self.groups:
+            score_mat[g.rows] = np.asarray(jax.block_until_ready(g.state))
         fresh: Dict[int, float] = {}
         for s in scored:
             fresh[int(s)] = self._host_combine(
                 score_mat[:, s], extras[s],
                 vit_rows[s] if vit_rows is not None else None)
 
+        hook = self._pre_stamp_hook
+        if hook is not None:
+            hook()
+
         wall = time.perf_counter() - t0
+        stamped: List[int] = []
         with self._lock:
             self.tick_count += 1
             for s, sc in fresh.items():
-                # a slot discharged (or churned to a new occupant) while
-                # the tick was in flight must not be stamped with the
-                # old occupant's score
+                # a slot discharged (or churned to a new occupant, or
+                # closed a NEWER window — whose samples the gather may
+                # already have seen) while the tick was in flight must
+                # not be stamped with this tick's score
                 if not self.occupied[s] \
-                        or self._admit_epoch[s] != epochs[s]:
+                        or self._admit_epoch[s] != epochs[s] \
+                        or self._close_version[s] != versions[s]:
                     continue
                 self.mirror[s] = sc
                 self.scored_version[s] = versions[s]
                 self.last_scored_tick[s] = self.tick_count
+                stamped.append(s)
             self.dispatch_count += n_disp
             self.n_stale_total += int(stale.sum())
             self.tick_seconds += wall
             self._cv.notify_all()
-            return TickReport(self.tick_count, len(scored),
-                              int(stale.sum()), wall, scored)
+            st_ids = np.asarray(stamped, np.int64)
+            return TickReport(
+                self.tick_count, len(scored), int(stale.sum()), wall,
+                scored, stamped=st_ids,
+                versions=versions[st_ids].copy(),
+                scores=np.asarray([fresh[int(s)] for s in st_ids]),
+                spad=spad)
 
     def _host_combine(self, score_col: np.ndarray, extra: Dict,
                       vit_row: Optional[np.ndarray]) -> float:
@@ -471,29 +726,183 @@ class SlotEngine:
 class SlotTicker:
     """Daemon-thread tick driver: calls ``engine.tick()`` every
     ``interval`` seconds.  ``interval`` is a plain writable float read
-    fresh each cycle — ``TickLadder`` actuates it live, no restart."""
+    fresh each cycle — ``TickLadder`` actuates it live, no restart.
+
+    The thread is GENERATIONAL (PR 8's worker epoch-token idiom):
+    ``respawn()`` bumps the epoch and starts a fresh thread; the
+    abandoned generation exits at its next epoch check, and even one
+    wedged inside a tick is harmless — the engine's tick lock makes
+    the new generation SKIP while the zombie finishes, and the
+    zombie's eventual stamp is a normally-guarded, correct (if late)
+    tick.  Every generation ever spawned stays in ``_threads`` so
+    ``stop()`` joins them ALL — a watchdog-respawned ticker can never
+    orphan a thread past the leak checker.
+
+    ``beat`` is the watchdog heartbeat: ``(epoch, count, stamp)``
+    advanced after each tick by the CURRENT generation only (a stale
+    generation can never beat).  ``before_tick`` is the fault plane's
+    stall hook: it returns a stall duration in seconds (0 for none)
+    and the ticker sleeps it out WITHOUT beating — an injected
+    ``ticker_stall`` looks exactly like a wedged tick to the watchdog.
+    """
 
     def __init__(self, engine: SlotEngine, interval: float = 0.05,
                  name: str = "repro-ticker"):
         self.engine = engine
         self.interval = float(interval)
+        self._base_name = name
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=name)
+        self._lock = threading.Lock()
+        self._epoch = 0
+        self.n_respawns = 0
+        self.before_tick = None    # () -> float stall seconds, or None
+        self._beat = (0, 0, time.monotonic())
+        self._threads: List[threading.Thread] = [
+            threading.Thread(target=self._run, args=(0,), daemon=True,
+                             name=name)]
 
     def start(self) -> "SlotTicker":
-        self._thread.start()
+        self._threads[-1].start()
         return self
 
-    def _run(self) -> None:
+    def _is_current(self, epoch: int) -> bool:
+        with self._lock:
+            return epoch == self._epoch
+
+    def _beat_now(self, epoch: int) -> None:
+        with self._lock:
+            if epoch == self._epoch:
+                self._beat = (epoch, self._beat[1] + 1,
+                              time.monotonic())
+
+    @property
+    def beat(self) -> Tuple[int, int, float]:
+        """(epoch, tick-loop count, monotonic stamp) — the stamp also
+        resets on ``respawn()`` so a fresh generation gets a full
+        deadline of grace before the watchdog may judge it."""
+        with self._lock:
+            return self._beat
+
+    def _run(self, epoch: int) -> None:
         while not self._stop.wait(self.interval):
+            if not self._is_current(epoch):
+                return
+            hook = self.before_tick
+            if hook is not None:
+                try:
+                    dur = float(hook() or 0.0)
+                except Exception:
+                    log.exception("before_tick hook failed")
+                    dur = 0.0
+                if dur > 0:
+                    time.sleep(dur)     # injected stall: no beat
+            if not self._is_current(epoch):
+                return
             try:
                 self.engine.tick()
             except Exception:
                 log.exception("slot tick failed; ticker continues")
+            self._beat_now(epoch)
+
+    def respawn(self) -> bool:
+        """Abandon the current generation and start a fresh one.
+        No-op (False) once stopped."""
+        with self._lock:
+            if self._stop.is_set():
+                return False
+            self._epoch += 1
+            epoch = self._epoch
+            t = threading.Thread(
+                target=self._run, args=(epoch,), daemon=True,
+                name=f"{self._base_name}-r{epoch}")
+            self._threads.append(t)
+            self.n_respawns += 1
+            self._beat = (epoch, self._beat[1], time.monotonic())
+        t.start()
+        return True
 
     def stop(self, join_timeout: float = 2.0) -> bool:
-        """Stop and join; returns True when the thread exited."""
+        """Stop and join EVERY generation ever spawned (watchdog
+        respawns included); True only when all of them exited."""
+        self._stop.set()
+        deadline = time.monotonic() + join_timeout
+        ok = True
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+            ok &= not t.is_alive()
+        return ok
+
+    def alive_threads(self) -> List[str]:
+        """Names of every still-running generation (the server's leak
+        accounting surface)."""
+        with self._lock:
+            threads = list(self._threads)
+        return [t.name for t in threads if t.is_alive()]
+
+    @property
+    def alive(self) -> bool:
+        """True when the CURRENT generation's thread is running (an
+        abandoned zombie doesn't count — it never ticks again)."""
+        with self._lock:
+            return self._threads[-1].is_alive()
+
+    @property
+    def name(self) -> str:
+        with self._lock:
+            return self._threads[-1].name
+
+
+class TickerWatchdog:
+    """Heartbeat watchdog over a ``SlotTicker``: a daemon poll loop
+    that respawns the ticker when its current generation dies or its
+    beat stamp goes quiet past the deadline (a wedged tick, an
+    injected ticker stall).  Readers are already safe during the gap
+    — ``read()``'s tick-age guard and ``wait_scored()``'s timeout
+    surface NaN-or-stale, never a wrong score — so the watchdog's
+    only job is to get ticks flowing again.
+
+    The quiet threshold is ``deadline_seconds + ticker.interval``
+    (read live, so a ``TickLadder`` shed to a slow rung doesn't read
+    as a stall), and the beat stamp resets on every respawn, giving
+    each new generation a full deadline of grace — no respawn storms.
+    """
+
+    def __init__(self, ticker: SlotTicker,
+                 deadline_seconds: float = 1.0, poll: float = 0.05,
+                 name: str = "repro-tickwatch"):
+        if deadline_seconds <= 0:
+            raise ValueError("deadline must be positive")
+        self.ticker = ticker
+        self.deadline = float(deadline_seconds)
+        self.poll = float(poll)
+        self.n_respawns = 0
+        self.events: List[Dict] = []
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+
+    def start(self) -> "TickerWatchdog":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.poll):
+            epoch, _count, stamp = self.ticker.beat
+            quiet = time.monotonic() - stamp
+            dead = not self.ticker.alive
+            if not dead and quiet <= self.deadline + self.ticker.interval:
+                continue
+            if self.ticker.respawn():
+                self.n_respawns += 1
+                self.events.append({
+                    "cause": "dead" if dead else "stall",
+                    "epoch": epoch, "quiet_s": round(quiet, 4)})
+            else:
+                return      # ticker stopped for good: nothing to guard
+
+    def stop(self, join_timeout: float = 2.0) -> bool:
         self._stop.set()
         self._thread.join(timeout=join_timeout)
         return not self._thread.is_alive()

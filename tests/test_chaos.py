@@ -130,13 +130,19 @@ def test_protect_gives_up_after_budget():
         clock=clk)
     plane.arm(devices=[d0])             # permanent, no swapper: hopeless
 
+    calls = {"n": 0}
+
     def score(windows):
+        calls["n"] += 1
+        clk.t += 0.02                   # injected time passes per try
         plane.guard(d0)
         return [1.0]
 
     guarded = plane.protect(score, retry_budget_s=0.05, retry_sleep=0.0)
     with pytest.raises(DeviceLostError):
         guarded([{}])
+    assert 2 <= calls["n"] <= 10        # retried, then gave up on the
+    #                                     INJECTED clock's budget
 
 
 def test_protect_abandoned_cobatch_stops_retrying():
